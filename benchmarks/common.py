@@ -1,0 +1,18 @@
+"""Shared benchmark helpers: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+
+
+def time_us(fn, *args, repeat: int = 5, **kw) -> float:
+    fn(*args, **kw)  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def emit(name: str, us: float, derived) -> str:
+    row = f"{name},{us:.2f},{derived}"
+    print(row)
+    return row

@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode) vs pure-jnp oracle.
+
+On this CPU container the numbers are correctness-path timings, not TPU
+performance; the TPU roofline lives in benchmarks/roofline_bench.py.
+Derived fields report the BS-vs-BP plane-pass arithmetic the paper predicts
+(b-bit weights => b plane passes vs one full-width pass).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.kernels import ref
+from repro.kernels.bitpack import bitpack
+from repro.kernels.bitparallel_matmul import bitparallel_matmul
+from repro.kernels.bitserial_matmul import bitserial_matmul
+from repro.kernels.flash_attention import flash_attention
+
+
+def kernels() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    M, K, N = 64, 128, 128
+    x = jnp.asarray(rng.integers(-32, 32, (M, K), dtype=np.int32)
+                    ).astype(jnp.int8)
+    for bits in (1, 2, 4):
+        w = jnp.asarray(rng.integers(0, 2 ** bits, (K, N), dtype=np.uint32))
+        planes = ref.bitpack_ref(w, bits)
+        us = time_us(lambda: np.asarray(
+            bitserial_matmul(x, planes, block_m=64, block_n=64)), repeat=2)
+        ok = bool(np.array_equal(
+            np.asarray(bitserial_matmul(x, planes, block_m=64, block_n=64)),
+            np.asarray(ref.bitserial_matmul_ref(x.astype(jnp.int32),
+                                                planes))))
+        rows.append(emit(f"kern.bitserial_matmul.{bits}b", us,
+                         f"plane_passes={bits};match={ok}"))
+    w8 = jnp.asarray(rng.integers(-128, 128, (K, N), dtype=np.int32)
+                     ).astype(jnp.int8)
+    us = time_us(lambda: np.asarray(
+        bitparallel_matmul(x, w8, block_m=64, block_n=64, block_k=64)),
+        repeat=2)
+    ok = bool(np.array_equal(
+        np.asarray(bitparallel_matmul(x, w8, block_m=64, block_n=64,
+                                      block_k=64)),
+        np.asarray(ref.bitparallel_matmul_ref(x, w8))))
+    rows.append(emit("kern.bitparallel_matmul.8b", us,
+                     f"plane_passes=1(full-width);match={ok}"))
+
+    w4 = jnp.asarray(rng.integers(0, 16, (K, N), dtype=np.uint32))
+    us = time_us(lambda: np.asarray(bitpack(w4, 4)), repeat=2)
+    ok = bool(np.array_equal(np.asarray(bitpack(w4, 4)),
+                             np.asarray(ref.bitpack_ref(w4, 4))))
+    rows.append(emit("kern.bitpack.4b", us, f"transpose_unit;match={ok}"))
+
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)
+    us = time_us(lambda: np.asarray(
+        flash_attention(q, k, v, block_q=64, block_k=64)), repeat=2)
+    close = bool(np.allclose(
+        np.asarray(flash_attention(q, k, v, block_q=64, block_k=64)),
+        np.asarray(ref.flash_attention_ref(q, k, v)), rtol=2e-5, atol=2e-5))
+    rows.append(emit("kern.flash_attention", us, f"match={close}"))
+    return rows
+
+
+ALL = [kernels]

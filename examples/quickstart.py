@@ -1,0 +1,39 @@
+"""Quickstart: the paper's cost model, planner, and taxonomy in 40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import Layout, PAPER_SYSTEM
+from repro.core.cost_model import vector_add_cost
+from repro.core.apps import aes_trace, aes_paper_accounting
+from repro.core.planner import plan
+from repro.core.taxonomy import CASE_STUDIES, classify
+
+
+def main():
+    # 1. Cycle-accurate layout comparison (paper Table 4)
+    print("== vector add (16-bit) ==")
+    for n in (1024, 65536, 262144):
+        bp = vector_add_cost(Layout.BP, n).total
+        bs = vector_add_cost(Layout.BS, n).total
+        print(f"  n={n:7d}: BP {bp:6d} cy | BS {bs:6d} cy | BS/BP {bs/bp:.2f}")
+
+    # 2. Hybrid scheduling (paper Sec. 5.4): AES-128
+    p = plan(aes_trace())
+    acc = aes_paper_accounting()
+    print("\n== AES-128 ==")
+    print(f"  static BP {p.static_bp} cy | static BS {p.static_bs} cy")
+    print(f"  paper hand-schedule hybrid: {acc['hybrid']} cy "
+          f"({acc['speedup']}x)")
+    print(f"  DP planner hybrid:          {p.total_cycles} cy "
+          f"({p.hybrid_speedup:.2f}x, {p.n_transposes} transposes)")
+
+    # 3. Workload taxonomy (paper Table 8)
+    print("\n== layout recommendations ==")
+    for name, feats in CASE_STUDIES.items():
+        v = classify(feats)
+        print(f"  {name:20s} -> {v.recommendation.value:6s} "
+              f"({v.reasons[0] if v.reasons else ''})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Batched serving demo: prefill + greedy decode with the KV cache.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch tinyllama_1_1b]
+"""
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.models import init_params, registry
+from repro.serve.decode import ServeSession
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b", choices=ARCH_IDS)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    fns = registry.model_fns(cfg)
+    params = init_params(fns.param_structure(cfg), jax.random.key(0))
+    sess = ServeSession(cfg, params, max_len=64)
+    prompts = [[1, 2, 3, 4], [9, 8, 7], [5]]
+    outs = sess.generate(prompts, max_new_tokens=args.new_tokens)
+    for p, o in zip(prompts, outs):
+        print(f"prompt {p} -> {o[len(p):]}")
+
+
+if __name__ == "__main__":
+    main()

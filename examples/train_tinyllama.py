@@ -1,0 +1,42 @@
+"""End-to-end training driver: reduced TinyLlama on the synthetic pipeline
+with checkpoint/restart. Loss must fall below the uniform baseline ln(V).
+
+    PYTHONPATH=src python examples/train_tinyllama.py [--steps 200]
+"""
+import argparse
+import math
+import tempfile
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.train.loop import LoopConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config("tinyllama_1_1b"))
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                      global_batch=8, structure=31)
+    opt = adamw.AdamWConfig(lr=1e-3, warmup_steps=20,
+                            total_steps=args.steps)
+    loop = LoopConfig(total_steps=args.steps, ckpt_every=50, log_every=10)
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="tinyllama_ckpt_")
+    tr = Trainer(cfg, opt, loop, data, ckpt)
+    out = tr.run()
+    for m in out["metrics"]:
+        print(f"step {m['step']:4d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}")
+    base = math.log(cfg.vocab_size)
+    print(f"\nfinal loss {out['loss']:.4f} vs uniform baseline {base:.4f}")
+    print(f"stragglers flagged: {out['stragglers']}")
+    assert out["loss"] < base, "model failed to beat the uniform baseline"
+    print("OK: learned structure in the synthetic stream")
+
+
+if __name__ == "__main__":
+    main()

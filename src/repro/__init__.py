@@ -1,0 +1,9 @@
+"""repro: layout-aware PIM characterization + multi-pod JAX LM framework.
+
+Reproduction of "No One-Size-Fits-All: A Workload-Driven Characterization of
+Bit-Parallel vs. Bit-Serial Data Layouts for Processing-using-Memory"
+(Zhang & Sadredini, 2025), embedded as the planning layer of a production
+JAX training/serving framework. See DESIGN.md for the system inventory.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,14 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352,
+16 experts top-4, fine-grained [hf:databricks/dbrx-base]."""
+import jax.numpy as jnp
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="dbrx_132b", family="moe",
+        n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=10752,
+        vocab_size=100352, head_dim=128,
+        n_experts=16, top_k=4, moe_every=1,
+        attn_policy="heads", dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,15 @@
+"""internvl2-2b [vlm]: 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92553; InternViT frontend is a STUB (input_specs provides 256 patch
+embeddings) [arXiv:2404.16821]."""
+import jax.numpy as jnp
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="internvl2_2b", family="vlm",
+        n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8, d_ff=8192,
+        vocab_size=92553, head_dim=128,
+        enc_seq=256,  # patch tokens per image (stub frontend)
+        attn_policy="heads", dtype=jnp.bfloat16,
+    )

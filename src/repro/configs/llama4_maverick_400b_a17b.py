@@ -1,0 +1,15 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 128e top-1, interleaved every 2nd layer
+[hf:meta-llama/Llama-4]. 40 heads % 16 != 0 => sequence attention policy."""
+import jax.numpy as jnp
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama4_maverick_400b_a17b", family="moe",
+        n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=8192,
+        vocab_size=202048, head_dim=128,
+        n_experts=128, top_k=1, moe_every=2,
+        attn_policy="sequence", dtype=jnp.bfloat16,
+    )

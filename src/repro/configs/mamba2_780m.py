@@ -1,0 +1,15 @@
+"""mamba2-780m [ssm]: 48L d_model=1536, SSD, d_state=128, vocab 50280
+[arXiv:2405.21060]. Attention-free => long_500k runs."""
+import jax.numpy as jnp
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="mamba2_780m", family="ssm",
+        n_layers=48, d_model=1536, n_heads=48, n_kv_heads=0, d_ff=0,
+        vocab_size=50280, head_dim=64,
+        ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_chunk=256,
+        tie_embeddings=True, subquadratic=True, attn_policy="heads",
+        dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,13 @@
+"""mistral-nemo-12b [dense]: 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072, 128k ctx [hf:mistralai/Mistral-Nemo-Base-2407]. head_dim 128."""
+import jax.numpy as jnp
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="mistral_nemo_12b", family="dense",
+        n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_ff=14336,
+        vocab_size=131072, head_dim=128, rope_theta=1_000_000.0,
+        attn_policy="heads", dtype=jnp.bfloat16,
+    )

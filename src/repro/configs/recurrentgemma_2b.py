@@ -1,0 +1,17 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000; RG-LRU + local attention (2 recurrent : 1 local, window 2048)
+[arXiv:2402.19427]. 10 heads % 16 != 0 => sequence policy; O(1) recurrent
+state + windowed cache => long_500k runs."""
+import jax.numpy as jnp
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="recurrentgemma_2b", family="hybrid",
+        n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, d_ff=7680,
+        vocab_size=256000, head_dim=256,
+        window=2048, block_pattern=("rec", "rec", "attn_local"),
+        lru_width=2560, conv_width=4, tie_embeddings=True,
+        subquadratic=True, attn_policy="sequence", dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,13 @@
+"""stablelm-1.6b [dense]: 24L d_model=2048 32H (MHA kv=32) d_ff=5632
+vocab=100352 [hf:stabilityai/stablelm-2-1_6b]. head_dim = 64."""
+import jax.numpy as jnp
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="stablelm_1_6b", family="dense",
+        n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=5632,
+        vocab_size=100352, head_dim=64,
+        attn_policy="heads", dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,13 @@
+"""tinyllama-1.1b [dense]: 22L d_model=2048 32H (GQA kv=4) d_ff=5632
+vocab=32000 [arXiv:2401.02385]. head_dim = 2048/32 = 64."""
+import jax.numpy as jnp
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="tinyllama_1_1b", family="dense",
+        n_layers=22, d_model=2048, n_heads=32, n_kv_heads=4, d_ff=5632,
+        vocab_size=32000, head_dim=64,
+        attn_policy="heads", dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,15 @@
+"""whisper-small [audio]: enc-dec 12+12L d_model=768 12H d_ff=3072
+vocab=51865; conv/mel frontend is a STUB (input_specs provides 1500 frame
+embeddings) [arXiv:2212.04356]."""
+import jax.numpy as jnp
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper_small", family="audio",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+        vocab_size=51865, head_dim=64,
+        enc_layers=12, enc_seq=1500,
+        tie_embeddings=True, attn_policy="sequence", dtype=jnp.bfloat16,
+    )

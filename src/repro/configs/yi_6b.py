@@ -1,0 +1,13 @@
+"""yi-6b [dense]: 32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000
+[arXiv:2403.04652]."""
+import jax.numpy as jnp
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="yi_6b", family="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4, d_ff=11008,
+        vocab_size=64000, head_dim=128,
+        attn_policy="heads", dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,20 @@
+"""Paper core: cycle-accurate BP/BS PIM layout characterization.
+
+Public API:
+  params         -- ArrayParams / SystemParams (iso-area study configuration)
+  cost_model     -- Table-2 primitives + derived kernel cycle formulas
+  microkernels   -- Tier-1 micro-kernel registry (Table 5)
+  apps           -- Tier-2 application traces (Table 6)
+  transpose      -- on-chip transpose unit cost (Sec. 4.1)
+  planner        -- hybrid BP/BS DP scheduler (Sec. 5.4 generalized)
+  taxonomy       -- workload -> layout classification (Table 8)
+  paper_tables   -- canonical published numbers (validation ground truth)
+"""
+from repro.core.cost_model import CycleCost, Layout  # noqa: F401
+from repro.core.params import (  # noqa: F401
+    ArrayParams, SystemParams, PAPER_SYSTEM, SINGLE_ARRAY,
+)
+from repro.core.planner import Phase, Plan, plan  # noqa: F401
+from repro.core.taxonomy import (  # noqa: F401
+    Recommendation, Verdict, WorkloadFeatures, classify,
+)

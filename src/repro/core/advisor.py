@@ -1,0 +1,89 @@
+"""Layout advisor over the assigned LM architectures.
+
+Extracts each architecture's per-layer operator trace (matmul dims,
+precision, control mix) from its ArchConfig and runs the paper's
+classification framework over it -- the Table-8 taxonomy applied to modern
+LM workloads (DESIGN.md §Arch-applicability). Used by
+examples/layout_advisor.py and the EXPERIMENTS.md applicability table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.taxonomy import (
+    Recommendation, WorkloadFeatures, classify,
+)
+from repro.models.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class OpTrace:
+    name: str
+    m: int  # output rows (tokens)
+    k: int  # contraction
+    n: int  # output cols
+    weight_bits: int
+    control_intensity: float = 0.0
+    bit_level_fraction: float = 0.0
+    mixed_precision: bool = False
+
+
+def arch_op_trace(cfg: ArchConfig, *, tokens: int = 4096,
+                  weight_bits: int = 4) -> list[OpTrace]:
+    """Representative per-layer ops for quantized serving at `weight_bits`."""
+    D = cfg.d_model
+    ops: list[OpTrace] = []
+    if cfg.family == "ssm":
+        Din = cfg.d_inner
+        ops.append(OpTrace("in_proj", tokens, D, 2 * Din + 2 * cfg.ssm_state
+                           + cfg.ssm_heads, weight_bits))
+        ops.append(OpTrace("ssd_scan", tokens, cfg.ssm_state,
+                           cfg.ssm_head_dim, 16, control_intensity=0.3))
+        ops.append(OpTrace("out_proj", tokens, Din, D, weight_bits))
+        return ops
+    if cfg.n_heads and cfg.n_kv_heads:
+        ops.append(OpTrace("qkv_proj", tokens, D, cfg.qkv_dim, weight_bits))
+        ops.append(OpTrace("attn_scores", tokens, cfg.head_dim, tokens, 16,
+                           control_intensity=0.25))  # softmax/masking
+        ops.append(OpTrace("o_proj", tokens, cfg.n_heads * cfg.head_dim, D,
+                           weight_bits))
+    if cfg.n_experts:
+        ops.append(OpTrace("router", tokens, D, cfg.n_experts, 16,
+                           control_intensity=0.6))  # top-k / dispatch
+        ops.append(OpTrace("expert_ffn", tokens * cfg.top_k, D, cfg.d_ff,
+                           weight_bits))
+    elif cfg.d_ff:
+        ops.append(OpTrace("ffn", tokens, D, cfg.d_ff, weight_bits))
+    if cfg.family == "hybrid":
+        W = cfg.lru_width
+        ops.append(OpTrace("rg_lru_gates", tokens, W, W, 16,
+                           control_intensity=0.4))
+    return ops
+
+
+def advise_op(op: OpTrace) -> dict:
+    f = WorkloadFeatures(
+        precision_bits=op.weight_bits,
+        dop=op.m * op.n,
+        control_intensity=op.control_intensity,
+        bit_level_fraction=(1.0 if op.weight_bits <= 2 else
+                            0.7 if op.weight_bits <= 4 else
+                            op.bit_level_fraction),
+        working_set_bits=op.weight_bits * 8,
+        mixed_precision=op.mixed_precision,
+    )
+    v = classify(f)
+    return {"op": op.name, "recommendation": v.recommendation.value,
+            "bp_score": v.bp_score, "bs_score": v.bs_score,
+            "reasons": v.reasons}
+
+
+def advise_arch(cfg: ArchConfig, *, weight_bits: int = 4) -> dict:
+    verdicts = [advise_op(op) for op in
+                arch_op_trace(cfg, weight_bits=weight_bits)]
+    kinds = {v["recommendation"] for v in verdicts}
+    overall = ("HYBRID" if len(kinds - {"HYBRID"}) > 1 or "HYBRID" in kinds
+               else kinds.pop())
+    return {"arch": cfg.name, "weight_bits": weight_bits,
+            "overall": overall, "ops": verdicts}

@@ -1,0 +1,250 @@
+"""Tier-1 micro-kernel cost definitions (paper Sec. 4.3.1 / Table 5).
+
+Each kernel assembles a :class:`CycleCost` from the Table-2 primitives and the
+row-serial movement model. Calibration points: Table 5 (16-bit, N=1024; ReLU
+N=8192) and Table 3 (32-bit compute-only). See DESIGN.md Sec. 8 for the few
+rows where the source's own components disagree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+from repro.core import cost_model as cm
+from repro.core.cost_model import CycleCost, Layout
+from repro.core.params import SystemParams, PAPER_SYSTEM
+
+
+@dataclasses.dataclass(frozen=True)
+class Footprint:
+    """Physical footprint per element (Table 5 Rows/Elem, Cols/Elem)."""
+
+    rows_per_elem: float
+    cols_per_elem: float
+
+
+@dataclasses.dataclass(frozen=True)
+class MicroKernel:
+    name: str
+    challenge: str
+    variant: dict  # layout -> variant name
+    cost_fn: Callable[[Layout, int, int, SystemParams], CycleCost]
+    footprint: dict  # layout -> Footprint
+    live_words: int = 3  # resident word-level variables (row-overflow analysis)
+
+    def cost(self, layout: Layout, n: int = 1024, width: int = 16,
+             sys: SystemParams = PAPER_SYSTEM) -> CycleCost:
+        return self.cost_fn(layout, n, width, sys)
+
+    def compute_only(self, layout: Layout, width: int = 32,
+                     n: int = 1, sys: SystemParams = PAPER_SYSTEM) -> int:
+        return self.cost_fn(layout, n, width, sys).compute
+
+
+def _mk(layout: Layout, sys: SystemParams, *, n: int, width: int,
+        in_bits: float, out_bits: float, bp: int, bs: int) -> CycleCost:
+    load = sys.xfer_cycles(in_bits)
+    readout = sys.xfer_cycles(out_bits)
+    if layout is Layout.BP:
+        compute = bp * sys.bp_batches(n, width)
+    else:
+        compute = bs * sys.bs_batches(n)
+    return CycleCost(load, compute, readout)
+
+
+# --- arithmetic -------------------------------------------------------------
+
+def _vector_add(l, n, w, s):
+    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=n * w,
+               bp=cm.BP_ADD, bs=cm.bs_add(w))
+
+
+def _vector_sub(l, n, w, s):
+    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=n * w,
+               bp=cm.BP_SUB, bs=cm.bs_sub(w))
+
+
+def _multu(l, n, w, s):
+    # BP widens both operands to the 2w product width before compute
+    # (Table 5: load 128 rows @16b/N=1024); BS loads native-width operands
+    # and grows the product in place (load 64).
+    in_bits = 2 * n * 2 * w if l is Layout.BP else 2 * n * w
+    return _mk(l, s, n=n, width=w, in_bits=in_bits, out_bits=n * 2 * w,
+               bp=cm.bp_mult(w), bs=cm.bs_mult(w))
+
+
+def _divu(l, n, w, s):
+    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=n * w,
+               bp=cm.div_bp(w), bs=cm.div_bs(w))
+
+
+def _minmax(l, n, w, s):
+    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=n * w,
+               bp=cm.minmax_bp(w), bs=cm.minmax_bs(w))
+
+
+# --- logical / bit-manipulation ----------------------------------------------
+
+def _reduction(l, n, w, s):
+    # Tree reduction: readout is the final-stage partial-sum region
+    # (n*w/2 bits; Table 5 readout 16 rows @ N=1024).
+    return _mk(l, s, n=n, width=w, in_bits=n * w, out_bits=n * w / 2,
+               bp=cm.reduction_bp(n), bs=cm.reduction_bs(w))
+
+
+def _bitcount(l, n, w, s):
+    # BP D&C stages keep data + two shifted-mask operands resident
+    # (4*n*w load bits; Table 5 load 128 rows); BS reads data only.
+    in_bits = 4 * n * w if l is Layout.BP else n * w
+    out_bits = n * w if l is Layout.BP else n * w / 2
+    return _mk(l, s, n=n, width=w, in_bits=in_bits, out_bits=out_bits,
+               bp=cm.bitcount_bp(w), bs=cm.bitcount_bs(w))
+
+
+def _bitweave(bits: int):
+    def fn(l, n, w, s):  # noqa: ARG001 (w unused: code width is `bits`)
+        # Packed b-bit codes + (2/b) predicate-constant planes
+        # (load rows 96/64/48 for b=1/2/4 @ N=1024); output is a result
+        # bitvector (n bits).
+        in_bits = n * 16 * (1 + 2.0 / bits) / 1  # 16 = word container width
+        comp = cm.bitweave_compute(bits, l)
+        load = s.xfer_cycles(in_bits)
+        readout = s.xfer_cycles(n)
+        return CycleCost(load, comp, readout)
+    return fn
+
+
+# --- control / predicate ------------------------------------------------------
+
+def _abs(l, n, w, s):
+    return _mk(l, s, n=n, width=w, in_bits=n * w, out_bits=n * w,
+               bp=cm.abs_bp(w), bs=cm.abs_bs(w))
+
+
+def _if_then_else(l, n, w, s):
+    # BP holds cond/true/false words (3 operands). BS stores the condition as
+    # a packed half-width flag plane => 2.5 operand loads (Table 5: 80 rows).
+    in_bits = 3 * n * w if l is Layout.BP else 2.5 * n * w
+    return _mk(l, s, n=n, width=w, in_bits=in_bits, out_bits=n * w,
+               bp=cm.if_then_else_bp(w), bs=cm.if_then_else_bs(w))
+
+
+def _equal(l, n, w, s):
+    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=n * w,
+               bp=cm.equal_bp(w), bs=cm.equal_bs(w))
+
+
+def _ge0(l, n, w, s):
+    return _mk(l, s, n=n, width=w, in_bits=n * w, out_bits=n * w / 2,
+               bp=cm.ge0_bp(w), bs=cm.ge0_bs(w))
+
+
+def _gt0(l, n, w, s):
+    # BS keeps a packed zero-test scratch plane => 1.5 operand loads
+    # (reconciles the inconsistent published row; DESIGN.md Sec. 8).
+    in_bits = n * w if l is Layout.BP else 1.5 * n * w
+    out_bits = n * w if l is Layout.BP else n * w / 2
+    return _mk(l, s, n=n, width=w, in_bits=in_bits, out_bits=out_bits,
+               bp=cm.gt0_bp(w), bs=cm.gt0_bs(w))
+
+
+def _relu(l, n, w, s):
+    # Published row (N=8192): load 512 / readout 512 in both modes -- the
+    # kernel streams data + zero-mask in, result + mask out (2x each way).
+    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=2 * n * w,
+               bp=cm.relu_k(w), bs=cm.relu_k(w))
+
+
+_FP = Footprint
+
+MICROKERNELS: dict[str, MicroKernel] = {
+    "vector_add": MicroKernel(
+        "vector_add", "6", {Layout.BP: "Standard", Layout.BS: "Standard"},
+        _vector_add,
+        {Layout.BP: _FP(3, 16), Layout.BS: _FP(49, 1)}, live_words=3),
+    "vector_sub": MicroKernel(
+        "vector_sub", "6", {Layout.BP: "Standard", Layout.BS: "Standard"},
+        _vector_sub,
+        {Layout.BP: _FP(3, 16), Layout.BS: _FP(49, 1)}, live_words=3),
+    "multu": MicroKernel(
+        "multu", "6", {Layout.BP: "HW Mult", Layout.BS: "Shift+Add"},
+        _multu,
+        {Layout.BP: _FP(4, 16), Layout.BS: _FP(64, 1)}, live_words=4),
+    "multu_const": MicroKernel(
+        "multu_const", "6", {Layout.BP: "HW Mult", Layout.BS: "Shift+Add"},
+        _multu,
+        {Layout.BP: _FP(3, 16), Layout.BS: _FP(48, 1)}, live_words=3),
+    "divu": MicroKernel(
+        "divu", "6", {Layout.BP: "Restoring", Layout.BS: "Restoring"},
+        _divu,
+        {Layout.BP: _FP(4, 16), Layout.BS: _FP(64, 1)}, live_words=4),
+    "min": MicroKernel(
+        "min", "6", {Layout.BP: "Shift Mask", Layout.BS: "Iter. Comp."},
+        _minmax,
+        {Layout.BP: _FP(5, 16), Layout.BS: _FP(50, 1)}, live_words=5),
+    "max": MicroKernel(
+        "max", "6", {Layout.BP: "Shift Mask", Layout.BS: "Iter. Comp."},
+        _minmax,
+        {Layout.BP: _FP(5, 16), Layout.BS: _FP(50, 1)}, live_words=5),
+    "reduction": MicroKernel(
+        "reduction", "6", {Layout.BP: "Tree", Layout.BS: "Native"},
+        _reduction,
+        {Layout.BP: _FP(2, 16), Layout.BS: _FP(17, 1)}, live_words=2),
+    "bitcount": MicroKernel(
+        "bitcount", "1", {Layout.BP: "D&C", Layout.BS: "Summation"},
+        _bitcount,
+        {Layout.BP: _FP(3, 16), Layout.BS: _FP(26, 1)}, live_words=3),
+    "bitweave1": MicroKernel(
+        "bitweave1", "1", {Layout.BP: "1b Logic", Layout.BS: "1b Logic"},
+        _bitweave(1),
+        {Layout.BP: _FP(53, 1024), Layout.BS: _FP(53, 1024)}, live_words=3),
+    "bitweave2": MicroKernel(
+        "bitweave2", "1", {Layout.BP: "2b Logic", Layout.BS: "2b Logic"},
+        _bitweave(2),
+        {Layout.BP: _FP(74, 512), Layout.BS: _FP(74, 512)}, live_words=3),
+    "bitweave4": MicroKernel(
+        "bitweave4", "1", {Layout.BP: "4b Logic", Layout.BS: "4b Logic"},
+        _bitweave(4),
+        {Layout.BP: _FP(116, 256), Layout.BS: _FP(116, 256)}, live_words=3),
+    "abs": MicroKernel(
+        "abs", "4", {Layout.BP: "Shift Mask", Layout.BS: "Serialised"},
+        _abs,
+        {Layout.BP: _FP(3, 16), Layout.BS: _FP(48, 1)}, live_words=3),
+    "if_then_else": MicroKernel(
+        "if_then_else", "2/6", {Layout.BP: "Mask 0-s", Layout.BS: "Synth. MUX"},
+        _if_then_else,
+        {Layout.BP: _FP(5, 16), Layout.BS: _FP(52, 1)}, live_words=10),
+    "equal": MicroKernel(
+        "equal", "6", {Layout.BP: "XOR+Reduce", Layout.BS: "Serial XOR"},
+        _equal,
+        {Layout.BP: _FP(3, 16), Layout.BS: _FP(49, 1)}, live_words=3),
+    "ge_0": MicroKernel(
+        "ge_0", "6", {Layout.BP: "Shift", Layout.BS: "Sign Bit"},
+        _ge0,
+        {Layout.BP: _FP(1, 16), Layout.BS: _FP(16, 1)}, live_words=2),
+    "gt_0": MicroKernel(
+        "gt_0", "6", {Layout.BP: "Synth.", Layout.BS: "Serial Red."},
+        _gt0,
+        {Layout.BP: _FP(3, 16), Layout.BS: _FP(17, 1)}, live_words=3),
+    "relu": MicroKernel(
+        "relu", "4", {Layout.BP: "Standard", Layout.BS: "Standard"},
+        _relu,
+        {Layout.BP: _FP(2, 16), Layout.BS: _FP(17, 1)}, live_words=2),
+}
+
+
+def kernel_cost(name: str, layout: Layout, n: int = 1024, width: int = 16,
+                sys: SystemParams = PAPER_SYSTEM) -> CycleCost:
+    return MICROKERNELS[name].cost(layout, n, width, sys)
+
+
+def table5_model_row(kernel: str, layout: Layout,
+                     sys: SystemParams = PAPER_SYSTEM) -> CycleCost:
+    """Reproduce the Table-5 operating point for a kernel (16-bit, N=1024,
+    except ReLU at N=8192)."""
+    n = 8192 if kernel in ("relu", "relu8k") else 1024
+    name = "relu" if kernel == "relu8k" else kernel
+    if name.startswith("bitweave") and name[-1].isdigit():
+        return MICROKERNELS[name].cost(layout, n=1024, width=16, sys=sys)
+    return MICROKERNELS[name].cost(layout, n=n, width=16, sys=sys)

@@ -1,0 +1,225 @@
+"""Canonical published numbers from the paper — ground truth for validation.
+
+Benchmarks and tests compare the model's outputs against these values. Rows
+whose published components do not sum to the published total (OCR/typesetting
+noise in the source) carry ``consistent=False`` and are validated
+component-wise only where meaningful (DESIGN.md Sec. 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+# --------------------------- Table 2: primitives ---------------------------
+
+TABLE2_BP = {"logic": 1, "add": 1, "sub": 2, "shift_per_bit": 1}
+TABLE2_BP_MULT = lambda w: w + 2  # noqa: E731
+TABLE2_BS = {"add1": 1, "sub1": 1, "shift": 0, "mux1": 4}
+
+
+# ----------------- Table 3: 32-bit kernel compute latency ------------------
+
+TABLE3 = {
+    # kernel: (BP cycles, BS cycles) @ 32-bit, compute-only
+    "vector_add": (1, 32),
+    "vector_mult": (34, 1024),
+    "min_max": (36, 192),
+    "if_then_else": (7, 97),
+}
+
+
+# ------------- Table 4: vector-add latency vs workload size ----------------
+
+@dataclasses.dataclass(frozen=True)
+class T4Row:
+    elements: int
+    bp_batches: int
+    bp_cycles: int
+    bs_cycles: int
+    speedup: float  # BS/BP
+
+
+TABLE4 = [
+    T4Row(1024, 1, 97, 112, 1.15),
+    T4Row(4096, 1, 385, 400, 1.04),
+    T4Row(16384, 1, 1537, 1552, 1.01),
+    T4Row(65536, 4, 6148, 6160, 1.00),
+    T4Row(262144, 16, 24592, 24592, 1.00),
+]
+
+
+# --------------- Table 5: micro-kernel cycle breakdown (16-bit) ------------
+
+@dataclasses.dataclass(frozen=True)
+class T5Row:
+    kernel: str
+    variant: str
+    mode: str  # "BP" | "BS"
+    load: int
+    compute: int
+    readout: int
+    total: int
+    challenge: str
+    consistent: bool = True  # load+compute+readout == total in the source?
+
+
+TABLE5 = [
+    # Arithmetic kernels (N=1024 elements, 16-bit)
+    T5Row("vector_add", "Standard", "BP", 64, 1, 32, 97, "6"),
+    T5Row("vector_add", "Standard", "BS", 64, 16, 32, 112, "6"),
+    T5Row("vector_sub", "Standard", "BP", 64, 2, 32, 98, "6"),
+    T5Row("vector_sub", "Standard", "BS", 64, 16, 32, 112, "6"),
+    T5Row("multu", "HW Mult", "BP", 128, 18, 64, 210, "6"),
+    T5Row("multu", "Shift+Add", "BS", 64, 256, 64, 384, "6"),
+    T5Row("multu_const", "HW Mult", "BP", 128, 18, 64, 210, "6"),
+    T5Row("multu_const", "Shift+Add", "BS", 64, 256, 64, 384, "6"),
+    T5Row("divu", "Restoring", "BP", 64, 640, 32, 736, "6"),
+    T5Row("divu", "Restoring", "BS", 64, 1280, 32, 1376, "6"),
+    T5Row("min", "Shift Mask", "BP", 64, 21, 32, 117, "6"),
+    T5Row("min", "Iter. Comp.", "BS", 64, 96, 32, 192, "6"),
+    T5Row("max", "Shift Mask", "BP", 64, 21, 32, 117, "6"),
+    T5Row("max", "Iter. Comp.", "BS", 64, 96, 32, 192, "6"),
+    # Logical / bit-manipulation kernels
+    T5Row("reduction", "Tree", "BP", 32, 19, 16, 67, "6"),
+    T5Row("reduction", "Native", "BS", 32, 16, 16, 64, "6"),
+    T5Row("bitcount", "D&C", "BP", 128, 25, 32, 185, "1"),
+    T5Row("bitcount", "Summation", "BS", 32, 80, 16, 128, "1"),
+    T5Row("bitweave", "1b Logic", "BP", 96, 225, 2, 323, "1"),
+    T5Row("bitweave", "2b Logic", "BS", 64, 434, 2, 500, "1"),
+    T5Row("bitweave", "4b Logic", "BS", 48, 852, 2, 902, "1"),
+    # Control / predicate kernels
+    T5Row("abs", "Shift Mask", "BP", 32, 18, 32, 82, "4"),
+    T5Row("abs", "Serialised", "BS", 32, 48, 32, 112, "4"),
+    T5Row("if_then_else", "Mask 0-s", "BP", 96, 7, 32, 135, "2/6"),
+    T5Row("if_then_else", "Synth. MUX", "BS", 80, 49, 32, 161, "2/6"),
+    T5Row("equal", "XOR+Reduce", "BP", 64, 22, 32, 118, "6"),
+    T5Row("equal", "Serial XOR", "BS", 64, 33, 32, 129, "6"),
+    T5Row("ge_0", "Shift", "BP", 32, 17, 16, 65, "6"),
+    T5Row("ge_0", "Sign Bit", "BS", 32, 1, 16, 49, "6"),
+    T5Row("gt_0", "Synth.", "BP", 32, 35, 32, 99, "6"),
+    # Published BS row: 32+17+16 != 81 (source inconsistency; we keep the
+    # published total and reproduce load=48 so components sum).
+    T5Row("gt_0", "Serial Red.", "BS", 48, 17, 16, 81, "6", consistent=False),
+    T5Row("relu8k", "Standard", "BP", 512, 17, 512, 1041, "4"),
+    T5Row("relu8k", "Standard", "BS", 512, 17, 512, 1041, "4"),
+]
+
+
+def t5_rows(kernel: str, mode: Optional[str] = None) -> list[T5Row]:
+    rows = [r for r in TABLE5 if r.kernel == kernel]
+    if mode is not None:
+        rows = [r for r in rows if r.mode == mode]
+    return rows
+
+
+# ------------------- Table 7 / Sec. 5.4: AES-128 per round ------------------
+
+TABLE7 = {
+    # stage: (BP cycles, BS cycles) per round, 16-byte state
+    "add_round_key": (16, 128),
+    "sub_bytes": (1568, 115),
+    "shift_rows": (32, 256),
+    "mix_columns": (272, 2176),
+}
+TABLE7_ROUND_TOTALS = {"BP": 1888, "BS": 2675}
+
+AES_TOTALS = {
+    # Published end-to-end AES-128 totals (10 rounds). NOTE (DESIGN.md Sec. 8):
+    # the published BP total uses the faithful AES structure (initial ARK +
+    # 10 rounds - final-round MixColumns) while the published BS total is the
+    # flat 10x round cost; we reproduce both with the paper's own accounting.
+    "BP": 18624,
+    "BS": 26750,
+    "BS_trace_faithful": 24702,  # what the faithful trace gives for pure BS
+    "hybrid": 6994,
+    "hybrid_speedup_vs_best_static": 2.66,
+    "per_round_hybrid": 725,
+    "transpose_per_round": 290,
+    "transpose_one_way": 145,
+}
+
+AES_SENSITIVITY_10X = {
+    # transpose core 1 -> 10 cycles (Sec. 5.4 sensitivity)
+    "runtime_increase_pct": 2.6,
+    "hybrid_speedup": 2.59,
+}
+
+HYBRID_THRESHOLD_CYCLES = 51  # Sec. 5.5: 2% of per-phase runtime
+
+
+# ----------------------- Fig. 8: VGG-13 utilization -------------------------
+
+# (block, out_channels, spatial) for ImageNet VGG-13; parallel ops = out/9
+# (3x3 kernel reuse), capacity = 262,144 bits (= 512 x 512 columns).
+FIG8_LAYERS = [
+    ("conv1", 64, 224),
+    ("conv2", 128, 112),
+    ("conv3", 256, 56),
+    ("conv4", 512, 28),
+    ("conv5", 512, 14),
+]
+
+FIG8_QUOTED_UTIL = {
+    # (layer, layout) -> utilization fraction quoted in the text. The text's
+    # narrative "Conv1-Conv3 achieve 100%" does not follow from the /9 model
+    # for conv2/conv3 BS (68%/34%) -- only the explicitly quoted numbers
+    # (conv4/conv5) plus conv1 are asserted (DESIGN.md Sec. 8).
+    ("conv4", "BS"): 0.17,
+    ("conv5", "BS"): 0.04,
+    ("conv4", "BP"): 1.00,
+    ("conv5", "BP"): 0.68,
+    ("conv1", "BP"): 1.00,
+    ("conv1", "BS"): 1.00,
+}
+
+
+# -------------------- Table 6: application classification -------------------
+
+@dataclasses.dataclass(frozen=True)
+class T6Class:
+    category: str
+    lo: float  # BS/BP speedup band (values < 1 => BS faster)
+    hi: float
+    factor: str
+
+
+TABLE6_BANDS = {
+    "strong_bp": T6Class("Strong BP preference", 1.5, 3.0,
+                         "Mixed arithmetic / control (Ch. 4,6)"),
+    "moderate_bp": T6Class("Moderate BP preference", 1.2, 1.5,
+                           "High arithmetic intensity, limited batching (6)"),
+    "balanced": T6Class("Balanced", 1.0, 1.15,
+                        "Batching neutralises latency (2)"),
+    "bs": T6Class("BS preference", 0.6, 0.9,
+                  "Bit-centric, full-density layouts (1)"),
+    "hybrid": T6Class("Hybrid recommended", 0.0, 0.0,
+                      "Phase diversity (3,4,5)"),
+}
+
+TABLE6_APPS = {
+    # app -> band key (paper Table 6; xnor_net / db_query are the two apps of
+    # the 22 not named in the table's grouping -- classified by our model).
+    "brightness": "strong_bp",
+    "kmeans": "strong_bp",
+    "keccak": "strong_bp",
+    "fir": "strong_bp",
+    "vgg13": "moderate_bp",
+    "vgg16": "moderate_bp",
+    "vgg19": "moderate_bp",
+    "gemm": "moderate_bp",
+    "gemv": "moderate_bp",
+    "conv2d": "moderate_bp",
+    "downsample": "moderate_bp",
+    "vector_add": "balanced",
+    "axpy": "balanced",
+    "pooling": "balanced",
+    "prefix_sum": "balanced",
+    "histogram": "bs",
+    "hdc": "bs",
+    "bitweave_db": "bs",
+    "aes": "hybrid",
+    "radix_sort": "hybrid",
+    "xnor_net": "bs",
+    "db_query": "hybrid",
+}

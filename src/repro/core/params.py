@@ -1,0 +1,88 @@
+"""Architectural parameters for the iso-area BP/BS PIM study (paper Table 1).
+
+The paper models a single Computing SRAM Array (CSA) of 128 rows x 512 columns
+with dual peripherals (word-level BP datapath / 1-bit BS datapath) sharing the
+cell core, scaled to a 512-array system for application workloads (Sec. 5.4:
+"we assume a system with 512 parallel arrays").
+
+Two system-level terms follow from the paper's accounting (Table 4/5):
+  * load/readout are *bandwidth-serial*: one 512-bit row per cycle, regardless
+    of how many arrays consume it (the external bus feeds rows sequentially);
+  * compute is *capacity-parallel*: all resident elements compute together, so
+    compute cycles = per-op cycles x ceil(N / parallel_capacity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayParams:
+    """One computing-SRAM array (paper Table 1)."""
+
+    rows: int = 128
+    cols: int = 512
+
+    @property
+    def bits(self) -> int:
+        return self.rows * self.cols
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemParams:
+    """A PIM system of `num_arrays` CSAs behind a row-serial load/store bus."""
+
+    array: ArrayParams = dataclasses.field(default_factory=ArrayParams)
+    num_arrays: int = 512
+    row_bandwidth_bits: int = 512  # bits transferred per load/readout cycle
+    clock_ghz: float = 1.0
+    transpose_core_cycles: int = 1  # on-chip transpose unit core latency
+
+    # ---- capacity ----------------------------------------------------------
+    @property
+    def total_columns(self) -> int:
+        return self.num_arrays * self.array.cols
+
+    def bp_parallel_elems(self, width: int) -> int:
+        """Elements processed per BP compute step (word PEs of `width` bits)."""
+        return self.total_columns // width
+
+    def bs_parallel_elems(self) -> int:
+        """Elements processed per BS compute step (one column = one 1-bit PE)."""
+        return self.total_columns
+
+    def bp_batches(self, n: int, width: int) -> int:
+        return max(1, math.ceil(n / self.bp_parallel_elems(width)))
+
+    def bs_batches(self, n: int) -> int:
+        return max(1, math.ceil(n / self.bs_parallel_elems()))
+
+    # ---- data movement -----------------------------------------------------
+    def xfer_cycles(self, bits: float) -> int:
+        """Cycles to move `bits` over the row-serial bus (load or readout)."""
+        return int(math.ceil(bits / self.row_bandwidth_bits))
+
+    # ---- row-overflow analysis (Challenge 2/5) ------------------------------
+    def bs_rows_required(self, live_words: int, width: int, carry_rows: int = 1) -> int:
+        """Vertical rows needed to keep `live_words` W-bit variables resident
+        in a BS column (plus carry scratch)."""
+        return live_words * width + carry_rows
+
+    def bp_rows_required(self, live_words: int) -> int:
+        """BP keeps each word-level variable in (a slice of) its own row."""
+        return live_words
+
+    def bs_row_overflow(self, live_words: int, width: int) -> bool:
+        return self.bs_rows_required(live_words, width) > self.array.rows
+
+    def bp_row_overflow(self, live_words: int) -> bool:
+        return self.bp_rows_required(live_words) > self.array.rows
+
+
+#: The paper's Tier-1/Tier-2 system (512 arrays; Sec. 5.4). Tier-1 numbers in
+#: Table 5 are consistent with the same capacity model (see tests).
+PAPER_SYSTEM = SystemParams()
+
+#: A single-array instance, used for row-overflow arguments in Sec. 3.
+SINGLE_ARRAY = SystemParams(num_arrays=1)

@@ -1,0 +1,174 @@
+"""Hybrid layout planner: choose BP / BS / per-phase hybrid schedules.
+
+The paper evaluates one hand-built hybrid schedule (AES, Sec. 5.4). We
+generalize it: a workload is a sequence of :class:`Phase`s, each with BP/BS
+cycle costs and a layout-dependent resident footprint; the planner runs a
+2-state dynamic program over phases, charging the on-chip transpose cost at
+every layout switch, and returns the optimal schedule plus both static
+baselines. This is the paper's "compiler analyses that automatically
+partition code into layout-optimal regions" future-work item, made concrete.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.cost_model import Layout
+from repro.core.params import SystemParams, PAPER_SYSTEM
+from repro.core.transpose import transpose_cycles
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One layout-homogeneous region of a workload."""
+
+    name: str
+    bp_cycles: int
+    bs_cycles: int
+    #: rows occupied by the live state in each layout -- determines the
+    #: transpose cost charged when entering/leaving this phase with a
+    #: different layout than its neighbour.
+    rows_bp: int = 16
+    rows_bs: int = 128
+
+    def cycles(self, layout: Layout) -> int:
+        return self.bp_cycles if layout is Layout.BP else self.bs_cycles
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    schedule: tuple[Layout, ...]
+    total_cycles: int
+    static_bp: int
+    static_bs: int
+    n_transposes: int
+    transpose_cycles_total: int
+
+    @property
+    def best_static(self) -> int:
+        return min(self.static_bp, self.static_bs)
+
+    @property
+    def best_static_layout(self) -> Layout:
+        return Layout.BP if self.static_bp <= self.static_bs else Layout.BS
+
+    @property
+    def hybrid_speedup(self) -> float:
+        return self.best_static / self.total_cycles
+
+    @property
+    def is_hybrid(self) -> bool:
+        return len(set(self.schedule)) > 1
+
+
+def _switch_cost(prev: Phase, cur: Phase, frm: Layout, to: Layout,
+                 sys: SystemParams) -> int:
+    """Transpose cost for carrying `cur`'s working state into layout `to`
+    when the previous phase ran in `frm`."""
+    if frm == to:
+        return 0
+    direction = "bp2bs" if to is Layout.BS else "bs2bp"
+    return transpose_cycles(cur.rows_bp, cur.rows_bs, direction, sys)
+
+
+def plan(phases: Sequence[Phase], sys: SystemParams = PAPER_SYSTEM,
+         initial_layout: Optional[Layout] = None) -> Plan:
+    """2-state DP over the phase sequence.
+
+    `initial_layout` is the layout the data arrives in; if given, a switch
+    before the first phase is charged too.
+    """
+    if not phases:
+        raise ValueError("empty phase list")
+    layouts = (Layout.BP, Layout.BS)
+
+    INF = float("inf")
+    # cost[l] = best cost ending with layout l; back[i][l] = predecessor layout
+    cost = {}
+    back: list[dict[Layout, Layout]] = []
+    first = phases[0]
+    for l in layouts:
+        c = first.cycles(l)
+        if initial_layout is not None and initial_layout != l:
+            c += _switch_cost(first, first, initial_layout, l, sys)
+        cost[l] = c
+    for i in range(1, len(phases)):
+        ph = phases[i]
+        new_cost = {}
+        back_i = {}
+        for l in layouts:
+            best, best_prev = INF, None
+            for p in layouts:
+                c = cost[p] + _switch_cost(phases[i - 1], ph, p, l, sys) \
+                    + ph.cycles(l)
+                if c < best:
+                    best, best_prev = c, p
+            new_cost[l] = best
+            back_i[l] = best_prev
+        cost = new_cost
+        back.append(back_i)
+
+    # traceback
+    end = min(layouts, key=lambda l: cost[l])
+    sched = [end]
+    for back_i in reversed(back):
+        sched.append(back_i[sched[-1]])
+    sched.reverse()
+    total = int(cost[end])
+
+    static_bp = sum(p.bp_cycles for p in phases)
+    static_bs = sum(p.bs_cycles for p in phases)
+    if initial_layout is Layout.BS:
+        static_bp += _switch_cost(first, first, Layout.BS, Layout.BP, sys)
+    if initial_layout is Layout.BP:
+        static_bs += _switch_cost(first, first, Layout.BP, Layout.BS, sys)
+
+    n_tr = sum(1 for a, b in zip(sched, sched[1:]) if a != b)
+    if initial_layout is not None and sched[0] != initial_layout:
+        n_tr += 1
+    tr_total = total - sum(p.cycles(l) for p, l in zip(phases, sched))
+    return Plan(tuple(sched), total, static_bp, static_bs, n_tr, tr_total)
+
+
+def hybrid_profitability_threshold(phases: Sequence[Phase],
+                                   sys: SystemParams = PAPER_SYSTEM,
+                                   max_core: int = 100_000) -> int:
+    """Largest transpose *core* latency for which the optimal plan is still
+    hybrid (paper Sec. 5.5: 51 cycles / 2%-of-phase-runtime in the paper's
+    configuration). Binary-searches the core-cycle knob."""
+    lo, hi = 0, max_core
+    base = plan(phases, sys)
+    if not base.is_hybrid:
+        return -1
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        s = dataclasses.replace(sys, transpose_core_cycles=mid)
+        if plan(phases, s).is_hybrid:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def transpose_sensitivity(phases: Sequence[Phase], core_cycles: int,
+                          sys: SystemParams = PAPER_SYSTEM) -> dict:
+    """Re-plan with a slower transpose core; report runtime delta & speedup
+    (paper Sec. 5.4 sensitivity study: 10x core => +~2.6%, 2.59x)."""
+    base = plan(phases, sys)
+    slow_sys = dataclasses.replace(sys, transpose_core_cycles=core_cycles)
+    # Paper holds the *schedule* fixed and re-costs it.
+    sched = base.schedule
+    total = 0
+    prev: Optional[Layout] = None
+    for ph, l in zip(phases, sched):
+        if prev is not None and prev != l:
+            total += _switch_cost(ph, ph, prev, l, slow_sys)
+        total += ph.cycles(l)
+        prev = l
+    return {
+        "base_total": base.total_cycles,
+        "slow_total": total,
+        "runtime_increase_pct": 100.0 * (total - base.total_cycles)
+        / base.total_cycles,
+        "hybrid_speedup": base.best_static / total,
+    }

@@ -1,0 +1,159 @@
+"""Workload-aware layout-selection framework (paper Table 8 + Sec. 5.5).
+
+Maps workload characteristics to a recommended layout:
+
+    BP-friendly                      BS-friendly
+    ---------------------------      -----------------------------
+    word-level arithmetic            bit-level ops (popcount, XOR)
+    conditional logic / predication  uniform, data-independent control
+    mixed-precision vectors          high DoP, full utilization
+    latency-critical tasks           large working sets
+    low degrees of parallelism       logical transpositions? (no: BP)
+
+plus the hybrid rule (Sec. 5.5): if the workload has at least one
+BS-favourable and one BP-favourable phase and the transpose cost is below the
+profitability threshold, recommend HYBRID.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence
+
+from repro.core.cost_model import Layout
+from repro.core.params import SystemParams, PAPER_SYSTEM
+
+
+class Recommendation(str, enum.Enum):
+    BP = "BP"
+    BS = "BS"
+    HYBRID = "HYBRID"
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadFeatures:
+    """Characteristics the paper identifies as first-order (Sec. 5.5)."""
+
+    precision_bits: int  # dominant operand width
+    dop: int  # degree of parallelism (concurrent independent ops)
+    control_intensity: float  # 0..1 fraction of predicated/branchy ops
+    bit_level_fraction: float  # 0..1 fraction of popcount/XOR-style bit ops
+    working_set_bits: int  # resident footprint needed
+    latency_critical: bool = False
+    mixed_precision: bool = False
+    intra_vector_shuffles: bool = False  # e.g. crypto permutations
+    phase_diverse: bool = False  # both BP- and BS-favourable phases present
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    recommendation: Recommendation
+    bp_score: float
+    bs_score: float
+    reasons: tuple[str, ...]
+
+
+def classify(f: WorkloadFeatures, sys: SystemParams = PAPER_SYSTEM) -> Verdict:
+    """Score both layouts per the Table-8 rules; HYBRID if phase-diverse."""
+    reasons: list[str] = []
+    bp, bs = 0.0, 0.0
+
+    # Granularity mismatch (Challenge 1): low DoP wastes BS columns.
+    bs_util = min(1.0, f.dop / sys.bs_parallel_elems())
+    bp_util = min(1.0, f.dop * f.precision_bits / sys.total_columns)
+    if bs_util < 0.25 and bp_util > 2 * bs_util:
+        bp += 2
+        reasons.append(
+            f"low DoP: BS utilization {bs_util:.1%} vs BP {bp_util:.1%} "
+            "(Challenge 1)")
+    elif bs_util >= 0.9:
+        bs += 2
+        reasons.append("massive DoP saturates 1-bit PEs (BS-friendly)")
+
+    # Vertical storage bottleneck (Challenges 2/3/5).
+    live_words = max(1, f.working_set_bits // max(1, f.precision_bits))
+    if sys.bs_row_overflow(live_words, f.precision_bits):
+        bp += 2
+        reasons.append(
+            f"BS row overflow: {sys.bs_rows_required(live_words, f.precision_bits)}"
+            f" rows needed > {sys.array.rows} (Challenge 2)")
+
+    # Control flow (Challenges 4/5).
+    if f.control_intensity > 0.2:
+        bp += 1 + f.control_intensity
+        reasons.append("predication/control favours word-level MUX "
+                       "(Challenges 4/5)")
+    elif f.control_intensity < 0.05:
+        bs += 0.5
+        reasons.append("uniform data-independent control (BS-friendly)")
+
+    # Bit-level operations.
+    if f.bit_level_fraction > 0.5:
+        bs += 1 + f.bit_level_fraction
+        reasons.append("bit-centric ops (popcount/XOR) use full BS density")
+
+    # Precision.
+    if f.precision_bits <= 8 and not f.mixed_precision:
+        bs += 1
+        reasons.append(f"low precision ({f.precision_bits}b) shortens "
+                       "bit-serial latency")
+    if f.mixed_precision:
+        bp += 2.5  # Challenge 4 is disqualifying for lockstep BS control
+        reasons.append("mixed precision breaks BS lockstep control "
+                       "(Challenge 4)")
+
+    # Latency criticality (Challenge 6).
+    if f.latency_critical:
+        bp += 1.5
+        reasons.append(f"latency-critical: BS needs >= {f.precision_bits} "
+                       "cycles/op (Challenge 6)")
+
+    # Intra-vector shuffles (Challenge 3).
+    if f.intra_vector_shuffles:
+        bp += 1.5
+        reasons.append("intra-vector permutations are zero-cost logical "
+                       "shuffles in ES-BP (Challenge 3)")
+
+    if f.phase_diverse and abs(bp - bs) < 2.5:
+        return Verdict(Recommendation.HYBRID, bp, bs,
+                       tuple(reasons + ["phase diversity: hybrid schedule "
+                                        "(Sec. 5.5)"]))
+    rec = Recommendation.BP if bp >= bs else Recommendation.BS
+    return Verdict(rec, bp, bs, tuple(reasons))
+
+
+# Canonical feature vectors for the paper's case studies -------------------
+
+CASE_STUDIES: dict[str, WorkloadFeatures] = {
+    "aes": WorkloadFeatures(
+        # CTR-mode bulk encryption: DoP = parallel blocks; the 128-bit state
+        # spills the 128-row column (129 rows with carry) in BS.
+        precision_bits=8, dop=1 << 20, control_intensity=0.1,
+        bit_level_fraction=0.45, working_set_bits=128,
+        intra_vector_shuffles=True, phase_diverse=True),
+    "vgg_late_layer": WorkloadFeatures(
+        precision_bits=16, dop=100352 // 9, control_intensity=0.05,
+        bit_level_fraction=0.0, working_set_bits=16 * 11,
+        latency_critical=False),
+    "hdc": WorkloadFeatures(
+        precision_bits=1, dop=1 << 25, control_intensity=0.0,
+        bit_level_fraction=0.95, working_set_bits=3),
+    "fir": WorkloadFeatures(
+        precision_bits=32, dop=512, control_intensity=0.1,
+        bit_level_fraction=0.0, working_set_bits=11 * 32,
+        latency_critical=True),
+    "edge_ai_int4": WorkloadFeatures(
+        precision_bits=4, dop=1 << 20, control_intensity=0.02,
+        bit_level_fraction=0.6, working_set_bits=4 * 4),
+    "mixed_precision_dnn": WorkloadFeatures(
+        precision_bits=8, dop=1 << 18, control_intensity=0.05,
+        bit_level_fraction=0.2, working_set_bits=8 * 4,
+        mixed_precision=True),
+}
+
+
+def paper_threshold_rule(per_phase_runtime_cycles: float) -> float:
+    """Sec. 5.5: hybrid is profitable for any phase-diverse app when the
+    transpose cost stays below 2% of per-phase runtime (51 cycles at the
+    paper's ~2550-cycle reference phase)."""
+    return 0.02 * per_phase_runtime_cycles

@@ -1,0 +1,44 @@
+"""On-chip transpose unit cost model (paper Sec. 4.1).
+
+The unit attaches to the column sense lines; its *core* transpose is
+``transpose_core_cycles`` (1 cycle at GHz-class speeds, consistent with
+bitline-shuffle hardware). End-to-end latency is dominated by feeding/draining
+the unit: for a logical object occupying M rows in BP form and N rows in BS
+form,
+
+    BP -> BS : read(M) + core + write(N)
+    BS -> BP : read(N) + core + write(M)
+
+For the AES state (16 bytes): M = 16 rows (1 byte/row), N = 128 rows
+(1 bit/row) => 16 + 1 + 128 = 145 cycles each way (paper footnote 1).
+"""
+from __future__ import annotations
+
+from repro.core.params import SystemParams, PAPER_SYSTEM
+
+
+def transpose_cycles(
+    rows_bp: int,
+    rows_bs: int,
+    direction: str,
+    sys: SystemParams = PAPER_SYSTEM,
+) -> int:
+    """Cycles to convert one logical object between layouts.
+
+    Args:
+      rows_bp: rows the object occupies in BP form (read/write granularity).
+      rows_bs: rows the object occupies in BS form.
+      direction: "bp2bs" or "bs2bp".
+    """
+    core = sys.transpose_core_cycles
+    if direction == "bp2bs":
+        return rows_bp + core + rows_bs
+    if direction == "bs2bp":
+        return rows_bs + core + rows_bp
+    raise ValueError(f"unknown direction {direction!r}")
+
+
+def round_trip_cycles(rows_bp: int, rows_bs: int,
+                      sys: SystemParams = PAPER_SYSTEM) -> int:
+    return (transpose_cycles(rows_bp, rows_bs, "bp2bs", sys)
+            + transpose_cycles(rows_bp, rows_bs, "bs2bp", sys))

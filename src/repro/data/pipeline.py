@@ -1,0 +1,82 @@
+"""Deterministic, shardable synthetic LM data pipeline.
+
+Batches are a stateless function of (seed, step): every host can generate
+exactly its own shard with no coordination, restarts resume bit-identically
+from the step counter (fault tolerance comes for free), and elastic
+re-sharding is just a different slice of the same global batch.
+
+The token stream is a order-k Markov-ish mixture (hash-chained), so a model
+CAN learn it -- losses fall below ln(V) within a few hundred steps, which
+the end-to-end example asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    structure: int = 97  # modulus giving the stream learnable structure
+
+
+def _hash_u32(x: np.ndarray) -> np.ndarray:
+    """xorshift-mult avalanche hash (vectorized, stateless)."""
+    x = x.astype(np.uint64)
+    x = (x ^ (x >> np.uint64(16))) * np.uint64(0x45D9F3B)
+    x = (x ^ (x >> np.uint64(16))) * np.uint64(0x45D9F3B)
+    x = x ^ (x >> np.uint64(16))
+    return (x & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def global_batch_at(cfg: DataConfig, step: int) -> dict:
+    """The full global batch for `step` (all data shards)."""
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    base = np.uint64(cfg.seed) * np.uint64(1_000_003) + np.uint64(step)
+    rows = np.arange(B, dtype=np.uint64)[:, None]
+    cols = np.arange(S + 1, dtype=np.uint64)[None, :]
+    # structured stream: token depends on (row-chain, position mod m)
+    chain = _hash_u32(base + rows * np.uint64(7919))
+    raw = _hash_u32(chain.astype(np.uint64) + (cols % np.uint64(cfg.structure)))
+    toks = (raw % np.uint32(V)).astype(np.int32)
+    return {
+        "tokens": toks[:, :-1],
+        "labels": toks[:, 1:],
+        "mask": np.ones((B, S), np.float32),
+    }
+
+
+def shard_slice(batch: dict, shard_index: int, num_shards: int) -> dict:
+    """This host's rows of the global batch (elastic: any num_shards that
+    divides the global batch)."""
+    B = batch["tokens"].shape[0]
+    assert B % num_shards == 0, (B, num_shards)
+    per = B // num_shards
+    lo = shard_index * per
+    return {k: v[lo:lo + per] for k, v in batch.items()}
+
+
+class DataIterator:
+    """Stateful convenience wrapper with step-resume."""
+
+    def __init__(self, cfg: DataConfig, shard_index: int = 0,
+                 num_shards: int = 1, start_step: int = 0):
+        self.cfg = cfg
+        self.shard_index = shard_index
+        self.num_shards = num_shards
+        self.step = start_step
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b = shard_slice(global_batch_at(self.cfg, self.step),
+                        self.shard_index, self.num_shards)
+        self.step += 1
+        return b

@@ -1,0 +1,49 @@
+"""Bit-transposition (packing) Pallas kernel -- the on-chip transpose unit.
+
+Converts word-layout (BP) weights into bitplane (BS) layout: words [K, N]
+with values < 2^bits become uint32 planes [bits, K//32, N]. This is the
+hardware transposer of paper Sec. 4.1 as a TPU kernel; the hybrid executor
+charges its cost exactly like the paper charges read(M)+core+write(N).
+
+Grid: (bits, K/32/bg, N/bn): each program packs `bg` groups of 32 rows for
+one bit position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, o_ref, *, bg: int):
+    b = pl.program_id(0)
+    w = w_ref[...].astype(jnp.uint32)  # [bg*32, bn]
+    bit = (w >> b) & jnp.uint32(1)
+    grouped = bit.reshape(bg, 32, w.shape[-1])
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    o_ref[0] = jnp.sum(grouped * weights[None, :, None], axis=1,
+                       dtype=jnp.uint32)
+
+
+def bitpack(w: jax.Array, bits: int, *, block_groups: int = 4,
+            block_n: int = 256, interpret: bool = True) -> jax.Array:
+    """w: unsigned words [K, N] (values < 2^bits) -> uint32 [bits, K//32, N]."""
+    K, N = w.shape
+    assert K % 32 == 0
+    Kg = K // 32
+    bg = min(block_groups, Kg)
+    while Kg % bg:
+        bg -= 1
+    bn = min(block_n, N)
+    while N % bn:
+        bn //= 2
+    return pl.pallas_call(
+        functools.partial(_kernel, bg=bg),
+        grid=(bits, Kg // bg, N // bn),
+        in_specs=[pl.BlockSpec((bg * 32, bn), lambda b, g, n: (g, n))],
+        out_specs=pl.BlockSpec((1, bg, bn), lambda b, g, n: (b, g, n)),
+        out_shape=jax.ShapeDtypeStruct((bits, Kg, N), jnp.uint32),
+        interpret=interpret,
+    )(w)

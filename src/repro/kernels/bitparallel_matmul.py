@@ -1,0 +1,57 @@
+"""Bit-parallel (word-level) int8 matmul Pallas kernel -- the BP layout.
+
+Words stay horizontal: one MXU pass over the full-width int8 operands with
+K-blocked accumulation in a VMEM scratch accumulator. 128-aligned tiles
+match the MXU systolic dimensions.
+
+Grid: (M/bm, N/bn, K/bk) with the K axis sequential ("arbitrary") so the
+accumulator scratch carries across K steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(jnp.int32)
+
+
+def bitparallel_matmul(x: jax.Array, w: jax.Array, *,
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """x: int8 [M, K]; w: int8 [K, N] -> int32 [M, N]."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    k_steps = K // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        # VMEM accumulator persisted across the sequential K axis
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,63 @@
+"""Bit-serial (bitplane) matmul Pallas kernel -- the TPU-native BS layout.
+
+The paper's BS column ALU processes one bit-position of every element per
+cycle. The TPU analogue is *bit-slicing*: an unsigned `bits`-wide weight
+matrix is stored as `bits` 1-bit planes (32 K-rows packed per uint32 word),
+and y = x @ W is computed plane-by-plane:
+
+    y = sum_b 2^b * (x @ plane_b)
+
+Each plane's product is a binary-matrix contraction: the kernel unpacks the
+plane tile in VMEM (shift+mask -- the "sense amplifier read" of the slice)
+and feeds the MXU with a 0/1 operand. Low-precision weights cost
+proportionally fewer plane passes -- exactly the BS latency scaling
+(Table 2: N-bit -> N cycles), while dense int8 BP costs one full-width pass.
+
+Grid: (M/bm, N/bn); K is kept resident per tile (weights stream plane-wise).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, planes_ref, o_ref, *, bits: int, K: int):
+    # x_ref: [bm, K] int8 ; planes_ref: [bits, K//32, bn] uint32
+    # o_ref: [bm, bn] int32
+    x = x_ref[...].astype(jnp.float32)  # MXU operand
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    for b in range(bits):  # bit-serial plane loop
+        packed = planes_ref[b]  # [K//32, bn] uint32
+        bits_kn = ((packed[:, None, :] >> shifts[None, :, None])
+                   & jnp.uint32(1))  # [K//32, 32, bn]
+        plane = bits_kn.reshape(K, -1).astype(jnp.float32)
+        acc = acc + jnp.float32(1 << b) * jax.lax.dot(
+            x, plane, precision=jax.lax.Precision.HIGHEST)
+    o_ref[...] = acc.astype(jnp.int32)
+
+
+def bitserial_matmul(x: jax.Array, planes: jax.Array, *,
+                     block_m: int = 128, block_n: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """x: int8 [M, K]; planes: uint32 [bits, K//32, N] -> int32 [M, N]."""
+    M, K = x.shape
+    bits, Kg, N = planes.shape
+    assert Kg * 32 == K, (K, Kg)
+    bm, bn = min(block_m, M), min(block_n, N)
+    assert M % bm == 0 and N % bn == 0
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, K=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((bits, Kg, bn), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(x, planes)

@@ -1,0 +1,61 @@
+"""Jitted public wrappers for the Pallas kernels + the layout-aware
+quantized linear op the planner drives (the paper's technique as a
+first-class kernel-selection decision).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import Layout
+from repro.core.taxonomy import Recommendation, WorkloadFeatures, classify
+from repro.kernels.bitpack import bitpack
+from repro.kernels.bitparallel_matmul import bitparallel_matmul
+from repro.kernels.bitserial_matmul import bitserial_matmul
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def pack_weights(w: jax.Array, bits: int, interpret: bool = True):
+    """BP -> BS layout conversion (the transpose unit)."""
+    return bitpack(w, bits, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_bs(x: jax.Array, planes: jax.Array, interpret: bool = True):
+    return bitserial_matmul(x, planes, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_bp(x: jax.Array, w: jax.Array, interpret: bool = True):
+    return bitparallel_matmul(x, w, interpret=interpret)
+
+
+def choose_layout(*, weight_bits: int, m: int, n: int, k: int,
+                  mixed_precision: bool = False) -> Recommendation:
+    """Layout advisor for one quantized matmul (Table-8 features)."""
+    f = WorkloadFeatures(
+        precision_bits=weight_bits,
+        dop=m * n,
+        control_intensity=0.0,
+        bit_level_fraction=1.0 if weight_bits <= 2 else
+        0.7 if weight_bits <= 4 else 0.2,
+        working_set_bits=weight_bits * 4,
+        mixed_precision=mixed_precision,
+    )
+    return classify(f).recommendation
+
+
+def layout_aware_matmul(x: jax.Array, w: jax.Array, *, weight_bits: int,
+                        interpret: bool = True):
+    """Dispatch x @ w to the BS (bitplane) or BP (word) kernel per the
+    planner's verdict. w: unsigned ints < 2^weight_bits, [K, N]."""
+    m, k = x.shape
+    n = w.shape[1]
+    rec = choose_layout(weight_bits=weight_bits, m=m, n=n, k=k)
+    if rec == Recommendation.BS:
+        planes = pack_weights(w.astype(jnp.uint32), weight_bits,
+                              interpret=interpret)
+        return matmul_bs(x, planes, interpret=interpret), Layout.BS
+    return matmul_bp(x, w.astype(jnp.int8), interpret=interpret), Layout.BP

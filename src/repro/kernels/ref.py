@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------- bitpack oracle ----
+
+def bitpack_ref(w: jax.Array, bits: int) -> jax.Array:
+    """Words [K, N] (unsigned values < 2^bits) -> packed bitplanes
+    uint32 [bits, K//32, N]: plane b, word g packs bit b of rows
+    32g..32g+31 (row r -> bit position r%32). The transpose-unit analogue."""
+    K, N = w.shape
+    assert K % 32 == 0
+    w = w.astype(jnp.uint32)
+    out = []
+    for b in range(bits):
+        bitsel = (w >> b) & 1  # [K, N]
+        grouped = bitsel.reshape(K // 32, 32, N)
+        weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+        out.append(jnp.sum(grouped * weights[None, :, None], axis=1,
+                           dtype=jnp.uint32))
+    return jnp.stack(out)
+
+
+def bitunpack_ref(planes: jax.Array, K: int) -> jax.Array:
+    """Inverse of bitpack_ref -> words [K, N] uint32."""
+    bits, Kg, N = planes.shape
+    assert Kg * 32 == K
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    w = jnp.zeros((K, N), jnp.uint32)
+    for b in range(bits):
+        bitsel = (planes[b][:, None, :] >> shifts[None, :, None]) & 1
+        w = w | (bitsel.reshape(K, N) << b)
+    return w
+
+
+# ----------------------------------------- bit-serial matmul oracle --------
+
+def bitserial_matmul_ref(x: jax.Array, planes: jax.Array) -> jax.Array:
+    """y = x @ W where W is bitplane-packed (uint32 [bits, K//32, N],
+    unsigned). x: int8/int32 [M, K]. Returns int32 [M, N]."""
+    bits, Kg, N = planes.shape
+    K = Kg * 32
+    w = bitunpack_ref(planes, K).astype(jnp.int32)  # [K, N]
+    return x.astype(jnp.int32) @ w
+
+
+# ----------------------------------------- bit-parallel matmul oracle ------
+
+def bitparallel_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Word-level int8 matmul -> int32 (the MXU analogue of BP)."""
+    return x.astype(jnp.int32) @ w.astype(jnp.int32)
+
+
+# --------------------------------------------- flash attention oracle ------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Plain quadratic attention (MHA, no GQA grouping), f32 math."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

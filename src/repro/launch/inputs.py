@@ -1,0 +1,62 @@
+"""`input_specs()`: ShapeDtypeStruct stand-ins for every model input --
+weak-type-correct, shardable, no device allocation (the dry-run pattern).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.dist.sharding import resolve_pspec
+from repro.models import registry
+from repro.models.base import ArchConfig, abstract_params
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.family == "vlm":
+        S_text = S - cfg.enc_seq
+        specs["prefix_embeds"] = _sds((B, cfg.enc_seq, cfg.d_model),
+                                      jnp.bfloat16)
+    else:
+        S_text = S
+    if cfg.family == "audio":
+        specs["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    specs["tokens"] = _sds((B, S_text), jnp.int32)
+    specs["labels"] = _sds((B, S_text), jnp.int32)
+    specs["mask"] = _sds((B, S_text), jnp.float32)
+    return specs
+
+
+def batch_pspecs(cfg: ArchConfig, specs: dict) -> dict:
+    """Symbolic pspecs: batch dim over the data axes, rest replicated."""
+    out = {}
+    for k, v in specs.items():
+        out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def batch_shardings(cfg: ArchConfig, specs: dict, mesh: Mesh) -> dict:
+    return {k: NamedSharding(mesh, resolve_pspec(ps, mesh, specs[k].shape))
+            for k, ps in batch_pspecs(cfg, specs).items()}
+
+
+def decode_token_specs(cfg: ArchConfig, shape: ShapeSpec):
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def decode_cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Abstract cache for a decode step at context length seq_len."""
+    fns = registry.model_fns(cfg)
+    structure = fns.cache_structure(cfg, shape.global_batch, shape.seq_len)
+    return structure  # ParamSpec pytree; materialize via abstract_params
+
+
+def cache_abstract(structure):
+    return abstract_params(structure)

@@ -1,0 +1,369 @@
+"""Shared neural layers: norms, RoPE, streaming flash attention, GQA
+projections, dense MLP, and grouped-dispatch MoE.
+
+All functions are pure (params passed explicitly) and insert activation
+sharding constraints via `repro.dist.sharding.shard` (no-ops off-mesh).
+Attention never materializes the full S x S score matrix: KV is processed in
+chunks with a running (max, denom, accum) softmax state -- the standard
+flash algorithm expressed in pure JAX (a Pallas TPU kernel with the same
+contract lives in repro/kernels/flash_attention.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import shard
+from repro import util
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- norms
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * lax.rsqrt(var + eps)).astype(dt) * weight + bias
+
+
+# -------------------------------------------------------------------- RoPE
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] or [S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------- streaming (flash) attention --
+
+def flash_attention(
+    q: jax.Array,          # [B, Sq, H, hd]
+    k: jax.Array,          # [B, Sk, K, hd]
+    v: jax.Array,          # [B, Sk, K, hd]
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    kv_len: Optional[jax.Array] = None,  # [B] valid cache length
+    window: int = 0,       # local attention window (0 => unbounded)
+    chunk: int = 0,
+) -> jax.Array:
+    """GQA flash attention with KV-chunk streaming softmax.
+
+    Memory: O(Sq * chunk) scores live, never O(Sq * Sk).
+    """
+    if not chunk:
+        chunk = util.flash_chunk_default()
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    # largest divisor of Sk not exceeding the requested chunk (a naive
+    # halving loop degrades e.g. Sk=1500 to chunk=4 => 375 scan bodies)
+    chunk = min(chunk, Sk)
+    while Sk % chunk:
+        chunk -= 1
+    n_chunks = Sk // chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    q_pos = (jnp.asarray(q_offset) + jnp.arange(Sq))  # [Sq]
+
+    ks = k.reshape(B, n_chunks, chunk, K, hd)
+    vs = v.reshape(B, n_chunks, chunk, K, hd)
+    ks = jnp.moveaxis(ks, 1, 0)  # [n, B, chunk, K, hd]
+    vs = jnp.moveaxis(vs, 1, 0)
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    o0 = jnp.zeros((B, K, G, Sq, hd), jnp.float32)
+
+    bf16_mm = util.attn_bf16_matmuls()
+
+    def body(carry, inp):
+        m, l, o = carry
+        kc, vc, idx = inp
+        base = idx * chunk
+        with jax.named_scope("flash_internal"):
+            # "flash_internal" tags the kernel-private tensors (scores,
+            # probabilities, softmax state): with the Pallas flash kernel
+            # they live in VMEM, and the dry-run's fused-attention
+            # accounting (REPRO_FUSED_ATTN=1) excludes them from HBM
+            # traffic. See kernels/flash_attention.py + launch/dryrun.py.
+            if bf16_mm:  # Perf-iteration lever: bf16 MXU ops, f32 state
+                s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(q.dtype), kc,
+                               preferred_element_type=jnp.float32)
+            else:
+                s = jnp.einsum("bqkgd,bckd->bkgqc", qg,
+                               kc.astype(jnp.float32))
+            s = s * scale
+            k_pos = base + jnp.arange(chunk)  # [chunk]
+            mask = jnp.ones((Sq, chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            if kv_len is not None:
+                mask = mask[None] & (k_pos[None, None, :]
+                                     < kv_len[:, None, None])
+                s = jnp.where(mask[:, None, None], s, NEG_INF)
+            else:
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            if bf16_mm:
+                pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(v.dtype), vc,
+                                preferred_element_type=jnp.float32)
+            else:
+                pv = jnp.einsum("bkgqc,bckd->bkgqd", p,
+                                vc.astype(jnp.float32))
+            o_new = o * alpha[..., None] + pv
+        return (m_new, l_new, o_new), None
+
+    (m, l, o), _ = util.scan(body, (m0, l0, o0),
+                             (ks, vs, jnp.arange(n_chunks)))
+    out = o / jnp.maximum(l, 1e-20)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention_reference(q, k, v, *, causal=True, q_offset=0, kv_len=None,
+                        window=0):
+    """Quadratic reference used by tests (materializes S x S)."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    if kv_len is not None:
+        full = mask[None] & (k_pos[None, None, :] < kv_len[:, None, None])
+        s = jnp.where(full[:, None, None], s, NEG_INF)
+    else:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------- GQA attention ---
+
+def gqa_attention(cfg, p, x, *, positions, cache=None, layer_name="attn",
+                  window: int = 0, chunk: int = 0):
+    """Full attention sub-block: QKV proj -> RoPE -> flash attn -> O proj.
+
+    cache: None for train/prefill-from-scratch, else dict with
+    {"k": [B, Smax, K, hd], "v": ..., "len": [B]} -- decode appends at
+    position `len` and attends over the prefix.
+    Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    policy = cfg.attn_policy
+
+    qkv = x @ p["wqkv"]  # [B, S, (H + 2K) * hd]
+    if policy == "heads":
+        qkv = shard(qkv, "batch", None, "model")
+    else:  # sequence policy: shard S, replicate heads
+        qkv = shard(qkv, "batch", "model", None)
+    q, kk, vv = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
+    q = q.reshape(B, S, H, hd)
+    kk = kk.reshape(B, S, K, hd)
+    vv = vv.reshape(B, S, K, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    kk = rope(kk, positions, cfg.rope_theta)
+
+    if cache is None:
+        if policy == "heads":
+            q = shard(q, "batch", None, "model", None)
+            kk = shard(kk, "batch", None, None, None)
+            vv = shard(vv, "batch", None, None, None)
+        else:
+            # context parallelism: Q stays sequence-sharded, KV all-gathered
+            q = shard(q, "batch", "model", None, None)
+            kk = shard(kk, "batch", None, None, None)
+            vv = shard(vv, "batch", None, None, None)
+        out = flash_attention(q, kk, vv, causal=True, window=window,
+                              chunk=chunk)
+        new_cache = None
+    else:
+        # decode: append S (=1) new token(s) at position cache["len"].
+        # k/v arrive model-sharded from the QKV split; constrain them to the
+        # cache's batch-only sharding FIRST so the update (and the cache)
+        # never reshards (a stray constraint here costs a full-cache
+        # all-gather per layer).
+        kk = shard(kk, "batch", None, None, None)
+        vv = shard(vv, "batch", None, None, None)
+        idx = cache["len"][0]  # uniform decode step across batch
+        ck = lax.dynamic_update_slice_in_dim(cache["k"],
+                                             kk.astype(cache["k"].dtype),
+                                             idx, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cache["v"],
+                                             vv.astype(cache["v"].dtype),
+                                             idx, axis=1)
+        ck = shard(ck, "batch", None, None, None)
+        cv = shard(cv, "batch", None, None, None)
+        if policy == "heads":
+            q = shard(q, "batch", None, "model", None)
+        out = flash_attention(q, ck, cv, causal=True, q_offset=idx,
+                              kv_len=cache["len"] + S, window=window,
+                              chunk=chunk)
+        new_cache = {"k": ck, "v": cv, "len": cache["len"] + S}
+
+    out = out.reshape(B, S, H * hd)
+    out = out @ p["wo"]
+    out = shard(out, "batch", None, None)
+    return out, new_cache
+
+
+# ------------------------------------------------------------- dense MLP ---
+
+def swiglu_mlp(p, x):
+    h = x @ p["wi_gate"]
+    g = x @ p["wi_up"]
+    h = shard(h, "batch", None, "model")
+    g = shard(g, "batch", None, "model")
+    out = (jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * g) @ p["wo"]
+    return shard(out, "batch", None, None)
+
+
+def gelu_mlp(p, x):
+    h = x @ p["wi"] + p.get("bi", 0)
+    h = shard(h, "batch", None, "model")
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out = h @ p["wo"] + p.get("bo", 0)
+    return shard(out, "batch", None, None)
+
+
+# ----------------------------------------------------- MoE (grouped EP) ----
+
+def moe_block(cfg, p, x, *, group_size: int = 512):
+    """Top-k MoE with grouped GShard dispatch.
+
+    Experts are sharded over the `data` axis (EP) and their FF dim over
+    `model` (TP); token groups bound the dispatch-einsum cost to
+    O(tokens * group_size) instead of O(tokens * seq).
+    """
+    B, S, D = x.shape
+    E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    tokens = x.reshape(B * S, D)
+    T = min(group_size, B * S)
+    while (B * S) % T:
+        T //= 2
+    G = (B * S) // T
+    xt = tokens.reshape(G, T, D)
+    xt = shard(xt, "batch", None, None)
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    gate, sel = lax.top_k(logits, k)  # [G, T, k]
+    gate = jax.nn.softmax(gate, axis=-1)
+
+    C = int(math.ceil(T * k * cf / E))
+    # position bookkeeping in f32 (counts up to T exceed bf16 integer
+    # precision); the dispatch/combine one-hots themselves hold exactly
+    # representable 0/1 (and gate weights), so they may live in bf16
+    # (REPRO_MOE_BF16_DISPATCH=1) -- halving the [G,T,E,C] tensor traffic.
+    from repro import util as _util
+    ddt = x.dtype if _util.moe_bf16_dispatch() else jnp.float32
+    onehot = jax.nn.one_hot(sel, E, dtype=jnp.float32)      # [G, T, k, E]
+    per_te = onehot.sum(2)                                  # [G, T, E] (0/1)
+    pos_te = jnp.cumsum(per_te, axis=1) - per_te            # exclusive count
+    pos_k = jnp.einsum("gte,gtke->gtk", pos_te, onehot)     # slot per choice
+    keep_k = (pos_k < C).astype(jnp.float32)                # capacity drop
+    keep = (keep_k[..., None] * onehot).astype(ddt)         # [G, T, k, E]
+    posc = (jax.nn.one_hot(pos_k, C, dtype=jnp.float32)
+            * keep_k[..., None]).astype(ddt)
+    disp = jnp.einsum("gtke,gtkc->gtec", keep, posc)        # [G, T, E, C]
+    comb = jnp.einsum("gtk,gtke,gtkc->gtec", gate.astype(ddt), keep, posc)
+
+    xe = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), xt)
+    if _util.moe_two_step_reshard():
+        # materialize token-sharded first, THEN exchange g(data) -> e(data):
+        # a pure dim exchange SPMD lowers as all-to-all instead of
+        # all-reduce + all-gather
+        xe = shard(xe, "batch", None, None, None)
+    xe = shard(xe, None, "data", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    h = shard(h, None, "data", None, "model")
+    u = shard(u, None, "data", None, "model")
+    a = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("gecf,efd->gecd", a, p["w_down"])
+    ye = shard(ye, None, "data", None, None)
+    if _util.moe_two_step_reshard():
+        ye = shard(ye, "batch", None, None, None)  # e(data) -> g(data) A2A
+    out = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), ye)
+    out = shard(out, "batch", None, None)
+    return out.reshape(B, S, D)
+
+
+# ----------------------------------------------------------- lm head/loss --
+
+def embed_tokens(p, tokens, d_model):
+    emb = jnp.take(p["embedding"], tokens, axis=0)
+    return shard(emb, "batch", None, None)
+
+
+def lm_logits(p, x, embedding=None):
+    table = embedding if embedding is not None else p["lm_head"]
+    logits = x @ table.T if embedding is not None else x @ table
+    return shard(logits, "batch", None, "model")
+
+
+def chunked_cross_entropy(logits_fn, x, labels, mask, chunk: int = 512):
+    """CE over S in chunks so the [B, chunk, V] logits (vocab-sharded) are
+    the only live logits tensor."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+
+    def body(carry, idx):
+        tot, cnt = carry
+        xs = lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=1)
+        ls = lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        ms = lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, axis=1)
+        logits = logits_fn(xs).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        nll = (lse - picked) * ms
+        return (tot + nll.sum(), cnt + ms.sum()), None
+
+    (tot, cnt), _ = util.scan(body, (jnp.float32(0), jnp.float32(0)),
+                              jnp.arange(n))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,228 @@
+"""Mamba-2: state-space duality (SSD) layer (arXiv:2405.21060).
+
+Chunked SSD algorithm (the "quadratic-within-chunk, linear-across-chunks"
+form of the paper's Listing 1):
+
+  per head h, state (N = d_state, P = head_dim):
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T
+    y_t = C_t . h_t + D x_t
+
+  chunks of length Q: intra-chunk attention-like term with decay mask
+  L_ij = exp(cum_i - cum_j), inter-chunk state passing via a (sequential)
+  scan over chunk states -- O(S Q) work, O(S/Q) scan steps.
+
+Decode carries (ssm state [B, H, N, P], conv window) -- O(1) per token,
+which is why this family runs `long_500k`.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import shard
+from repro import util
+from repro.models.base import ArchConfig, ParamSpec
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------- structure ---
+
+def param_structure(cfg: ArchConfig):
+    D, dt = cfg.d_model, cfg.dtype
+    Din = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    V = cfg.padded_vocab
+    nl = cfg.n_layers
+    conv_dim = Din + 2 * N  # x, B, C share the conv (mamba2 layout)
+    layer = {
+        "ln": ParamSpec((nl, D), dt, (None, None), init="ones"),
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": ParamSpec((nl, D, 2 * Din + 2 * N + H), dt,
+                          (None, None, "model"), fan_in=D),
+        "conv_w": ParamSpec((nl, cfg.conv_width, conv_dim), dt,
+                            (None, None, "model"), init="small"),
+        "A_log": ParamSpec((nl, H), jnp.float32, (None, "model"),
+                           init="small"),
+        "D": ParamSpec((nl, H), jnp.float32, (None, "model"), init="small"),
+        "dt_bias": ParamSpec((nl, H), jnp.float32, (None, "model"),
+                             init="small"),
+        "norm": ParamSpec((nl, Din), dt, (None, "model"), init="ones"),
+        "w_out": ParamSpec((nl, Din, D), dt, (None, "model", None),
+                           fan_in=Din),
+    }
+    return {
+        "embedding": ParamSpec((V, D), dt, ("model", None), init="embed"),
+        "final_ln": ParamSpec((D,), dt, (None,), init="ones"),
+        "blocks": [layer],
+    }
+
+
+def cache_structure(cfg: ArchConfig, batch: int, max_len: int):
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_dim = cfg.d_inner + 2 * N
+    nl = cfg.n_layers
+    return {
+        "len": ParamSpec((batch,), jnp.int32, ("batch",), init="zeros"),
+        "blocks": [{
+            "ssm": ParamSpec((nl, batch, H, N, P), jnp.float32,
+                             (None, "batch", "model", None, None),
+                             init="zeros"),
+            "conv": ParamSpec((nl, batch, cfg.conv_width - 1, conv_dim),
+                              cfg.dtype, (None, "batch", None, "model"),
+                              init="zeros"),
+        }],
+    }
+
+
+# ------------------------------------------------------------------- SSD ---
+
+def _ssd_chunked(x, log_a, B, C, chunk):
+    """x: [B?, S, H, P]; log_a: [B?, S, H]; B, C: [B?, S, N].
+    Returns y [B?, S, H, P] and final state [B?, H, N, P].
+    Single shared B/C group (mamba2-780m uses n_groups=1)."""
+    Bb, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+    xr = x.reshape(Bb, nc, Q, H, P)
+    lr = log_a.reshape(Bb, nc, Q, H).astype(jnp.float32)
+    Br = B.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    Cr = C.reshape(Bb, nc, Q, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(lr, axis=2)  # [B, nc, Q, H]
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) x_j
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)  # [B, nc, Q, Q]
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    mask = causal[None, None, :, :, None]
+    lmat = jnp.where(mask, jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", scores, lmat,
+                         xr.astype(jnp.float32))
+
+    # chunk states: S_c = sum_j exp(cum_Q - cum_j) B_j x_j^T  [B,nc,H,N,P]
+    tail_decay = jnp.exp(cum[:, :, -1:, :] - cum)  # [B, nc, Q, H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Br, tail_decay,
+                        xr.astype(jnp.float32))
+
+    # inter-chunk scan: S_running (before chunk c)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B, nc, H]
+
+    def step(carry, inp):
+        s_c, d_c = inp  # [B,H,N,P], [B,H]
+        new = carry * d_c[:, :, None, None] + s_c
+        return new, carry  # emit state *before* this chunk
+
+    s0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    final, prev_states = util.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B, nc, H, N, P]
+
+    # inter-chunk contribution: y_i += exp(cum_i) C_i . S_prev
+    in_decay = jnp.exp(cum)  # [B, nc, Q, H]
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cr, in_decay, prev_states)
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, final
+
+
+def _ssd_decode(x, log_a, B, C, state):
+    """Single-token recurrence. x: [B, 1, H, P]; state: [B, H, N, P]."""
+    a = jnp.exp(log_a[:, 0].astype(jnp.float32))  # [B, H]
+    Bt = B[:, 0].astype(jnp.float32)  # [B, N]
+    Ct = C[:, 0].astype(jnp.float32)
+    xt = x[:, 0].astype(jnp.float32)  # [B, H, P]
+    new_state = state * a[:, :, None, None] + \
+        jnp.einsum("bn,bhp->bhnp", Bt, xt)
+    y = jnp.einsum("bn,bhnp->bhp", Ct, new_state)
+    return y[:, None], new_state
+
+
+# ---------------------------------------------------------------- forward --
+
+def _mamba_layer(cfg: ArchConfig, p, x, *, cache=None):
+    Bb, S, D = x.shape
+    Din, H, N, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = h @ p["w_in"]  # [B, S, 2*Din + 2N + H]
+    proj = shard(proj, "batch", None, "model")
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [Din, 2 * Din, 2 * Din + N, 2 * Din + 2 * N], axis=-1)
+
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    from repro.models.recurrent import _causal_conv
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xin, Bc, Cc = jnp.split(conv_out, [Din, Din + N], axis=-1)
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"][None, None, :])  # [B, S, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H] (negative)
+    log_a = dt_f * A[None, None, :]
+    xh = xin.reshape(Bb, S, H, P)
+    xh_dt = xh.astype(jnp.float32) * dt_f[..., None]
+
+    if cache is None:
+        y, _ = _ssd_chunked(xh_dt, log_a, Bc, Cc, cfg.ssm_chunk)
+        new_cache = None
+    else:
+        y, new_state = _ssd_decode(xh_dt, log_a, Bc, Cc,
+                                   cache["ssm"].astype(jnp.float32))
+        new_cache = {"ssm": new_state, "conv": new_conv}
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bb, S, Din).astype(x.dtype)
+    y = L.rms_norm(y, p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["w_out"]
+    return x + shard(out, "batch", None, None), new_cache
+
+
+def forward_hidden(cfg: ArchConfig, params, batch):
+    x = L.embed_tokens(params, batch["tokens"], cfg.d_model)
+
+    def scan_fn(x, lp):
+        x, _ = _mamba_layer(cfg, lp, x)
+        return x, None
+
+    if util.remat_enabled():
+        scan_fn = jax.checkpoint(
+            scan_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = util.scan(scan_fn, x, params["blocks"][0])
+    return L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+def forward_train(cfg: ArchConfig, params, batch):
+    x = forward_hidden(cfg, params, batch)
+    from repro.models.transformer import _logits_fn
+    return L.chunked_cross_entropy(_logits_fn(cfg, params), x,
+                                   batch["labels"], batch["mask"])
+
+
+def forward_logits(cfg: ArchConfig, params, batch):
+    from repro.models.transformer import _logits_fn
+    return _logits_fn(cfg, params)(forward_hidden(cfg, params, batch))
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens):
+    x = L.embed_tokens(params, tokens, cfg.d_model)
+
+    def scan_fn(carry, inp):
+        x = carry
+        lp, lc = inp
+        x, nc = _mamba_layer(cfg, lp, x, cache=lc)
+        return x, nc
+
+    x, new_caches = util.scan(scan_fn, x,
+                              (params["blocks"][0], cache["blocks"][0]))
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    from repro.models.transformer import _logits_fn
+    logits = _logits_fn(cfg, params)(x)
+    return logits, {"len": cache["len"] + tokens.shape[1],
+                    "blocks": [new_caches]}

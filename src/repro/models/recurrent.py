@@ -1,0 +1,83 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    x_t' = conv1d(Wx x)_t                 (short causal depthwise conv)
+    r_t  = sigmoid(Wa x_t')               (recurrence gate)
+    i_t  = sigmoid(Wi x_t')               (input gate)
+    a_t  = exp(-c * softplus(A) * r_t)    (per-channel decay, c = 8)
+    h_t  = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t')
+    out  = Wo (h * sigmoid(gate))
+
+Training/prefill uses `lax.associative_scan` over time (parallel prefix --
+the TPU-friendly form); decode carries (h, conv window) in the cache: O(1)
+state, which is what makes `long_500k` runnable for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import shard
+
+_C = 8.0
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv along time. x: [B, S, W]; w: [K, W].
+    conv_state: [B, K-1, W] prefix (decode) or None (zero-pad)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, W]
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return out, new_state
+
+
+def rg_lru_block(cfg, p, x, *, cache=None):
+    """x: [B, S, D] -> ([B, S, D], new_cache)."""
+    B, S, D = x.shape
+    W = cfg.lru_width
+
+    xb = x @ p["wx"]  # [B, S, W]
+    gate = x @ p["wgate"]
+    xb = shard(xb, "batch", None, "model")
+    gate = shard(gate, "batch", None, "model")
+
+    conv_state = cache["conv"] if cache is not None else None
+    xb, new_conv = _causal_conv(xb, p["conv_w"][..., :], conv_state)
+
+    r = jax.nn.sigmoid((xb @ p["w_a_gate"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xb @ p["w_input_gate"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)  # [B, S, W]
+    gated_x = i * xb.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * gated_x
+
+    if cache is None:
+        # h_t = a_t h_{t-1} + b_t  via associative scan on (a, b) pairs
+        def combine(l, r):
+            (al, bl), (ar, br) = l, r
+            return al * ar, ar * bl + br
+        a_s, h = lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = None
+    else:
+        h0 = cache["h"].astype(jnp.float32)  # [B, W]
+
+        def step(hprev, inp):
+            at, bt = inp
+            hnew = at * hprev + bt
+            return hnew, hnew
+        hT, hs = lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                     jnp.moveaxis(b, 1, 0)))
+        h = jnp.moveaxis(hs, 0, 1)
+        new_cache = {"h": hT, "conv": new_conv}
+
+    h = h.astype(x.dtype) * jax.nn.sigmoid(gate.astype(jnp.float32)
+                                           ).astype(x.dtype)
+    out = h @ p["wo"]
+    return shard(out, "batch", None, None), new_cache

@@ -1,0 +1,54 @@
+"""Model registry: family -> (param_structure, forward_train, decode_step,
+cache_structure), plus analytic parameter/FLOP accounting for the roofline.
+"""
+from __future__ import annotations
+
+import math
+from types import SimpleNamespace
+
+from repro.models.base import ArchConfig, param_count_of
+
+
+def model_fns(cfg: ArchConfig) -> SimpleNamespace:
+    if cfg.family == "ssm":
+        from repro.models import mamba2 as m
+    elif cfg.family == "audio":
+        from repro.models import whisper as m
+    else:  # dense | moe | hybrid | vlm share the decoder stack
+        from repro.models import transformer as m
+    return SimpleNamespace(
+        param_structure=m.param_structure,
+        cache_structure=m.cache_structure,
+        forward_train=m.forward_train,
+        forward_hidden=m.forward_hidden,
+        forward_logits=m.forward_logits,
+        decode_step=m.decode_step,
+    )
+
+
+def param_count(cfg: ArchConfig) -> int:
+    """Exact parameter count from the parameter structure."""
+    return param_count_of(model_fns(cfg).param_structure(cfg))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: top_k of n_experts experts).
+    Used for MODEL_FLOPS = 6 * N_active * D (dense) in the roofline."""
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    st = model_fns(cfg).param_structure(cfg)
+    expert_leaves = 0
+    for blk in st["blocks"]:
+        mlp = blk.get("mlp", {})
+        for name in ("w_gate", "w_up", "w_down"):
+            if name in mlp:
+                expert_leaves += math.prod(mlp[name].shape)
+    active_frac = cfg.top_k / cfg.n_experts
+    return int(total - expert_leaves * (1 - active_frac))
+
+
+def model_flops(cfg: ArchConfig, tokens: int, *, train: bool = True) -> float:
+    """6*N_active*D for training (fwd+bwd), 2*N_active*D for inference."""
+    n = active_param_count(cfg)
+    return (6.0 if train else 2.0) * n * tokens

@@ -1,0 +1,211 @@
+"""Whisper-small backbone: encoder-decoder transformer (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the assignment: `input_specs` provides
+precomputed frame embeddings [B, enc_seq=1500, D]. Backbone dims are exact
+(12+12 layers, d_model 768, 12 heads, d_ff 3072, vocab 51865->51968 padded).
+Adaptations recorded in DESIGN.md: RoPE replaces learned absolute positions
+(the assigned decode_32k/prefill_32k shapes exceed Whisper's 448-token
+decoder), and norms are unified to RMSNorm across the zoo.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import shard
+from repro import util
+from repro.models import layers as L
+from repro.models.base import ArchConfig, ParamSpec
+from repro.models.transformer import _logits_fn
+
+
+def _attn(cfg, n):
+    D, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wqkv": ParamSpec((n, D, cfg.qkv_dim), cfg.dtype,
+                          (None, None, "model"), fan_in=D),
+        "wo": ParamSpec((n, cfg.n_heads * hd, D), cfg.dtype,
+                        (None, "model", None), fan_in=cfg.n_heads * hd),
+    }
+
+
+def _xattn(cfg, n):
+    D, hd, H, K = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    return {
+        "wq": ParamSpec((n, D, H * hd), cfg.dtype, (None, None, "model"),
+                        fan_in=D),
+        "wkv": ParamSpec((n, D, 2 * K * hd), cfg.dtype, (None, None, "model"),
+                         fan_in=D),
+        "wo": ParamSpec((n, H * hd, D), cfg.dtype, (None, "model", None),
+                        fan_in=H * hd),
+    }
+
+
+def _mlp(cfg, n):
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "wi": ParamSpec((n, D, F), cfg.dtype, (None, None, "model"),
+                        fan_in=D),
+        "wo": ParamSpec((n, F, D), cfg.dtype, (None, "model", None),
+                        fan_in=F),
+    }
+
+
+def param_structure(cfg: ArchConfig):
+    D, dt = cfg.d_model, cfg.dtype
+    ne, nd = cfg.enc_layers, cfg.n_layers
+    ln = lambda n: ParamSpec((n, D), dt, (None, None), init="ones")  # noqa
+    return {
+        "embedding": ParamSpec((cfg.padded_vocab, D), dt, ("model", None),
+                               init="embed"),
+        "enc_pos": ParamSpec((cfg.enc_seq, D), dt, (None, None),
+                             init="small"),
+        "encoder": {"ln1": ln(ne), "attn": _attn(cfg, ne),
+                    "ln2": ln(ne), "mlp": _mlp(cfg, ne)},
+        "enc_final_ln": ParamSpec((D,), dt, (None,), init="ones"),
+        "decoder": {"ln1": ln(nd), "self_attn": _attn(cfg, nd),
+                    "lnx": ln(nd), "cross_attn": _xattn(cfg, nd),
+                    "ln2": ln(nd), "mlp": _mlp(cfg, nd)},
+        "final_ln": ParamSpec((D,), dt, (None,), init="ones"),
+    }
+
+
+def cache_structure(cfg: ArchConfig, batch: int, max_len: int):
+    K, hd, dt, nd = cfg.n_kv_heads, cfg.head_dim, cfg.dtype, cfg.n_layers
+
+    def kv(length):
+        return {
+            "k": ParamSpec((nd, batch, length, K, hd), dt,
+                           (None, "batch", None, None, None), init="zeros"),
+            "v": ParamSpec((nd, batch, length, K, hd), dt,
+                           (None, "batch", None, None, None), init="zeros"),
+        }
+
+    return {
+        "len": ParamSpec((batch,), jnp.int32, ("batch",), init="zeros"),
+        "self_kv": kv(max_len),
+        "cross_kv": kv(cfg.enc_seq),
+    }
+
+
+# ----------------------------------------------------------------- encode --
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames: [B, enc_seq, D] stub embeddings -> encoder states."""
+    x = frames.astype(cfg.dtype) + params["enc_pos"][None]
+    x = shard(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])
+
+    def layer(x, p):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        qkv = h @ p["attn"]["wqkv"]
+        qkv = shard(qkv, "batch", "model", None)
+        H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q, k, v = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
+        B, S = h.shape[:2]
+        q = L.rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta)
+        k = L.rope(k.reshape(B, S, K, hd), positions, cfg.rope_theta)
+        v = v.reshape(B, S, K, hd)
+        o = L.flash_attention(q, k, v, causal=False)  # bidirectional
+        x = x + shard(o.reshape(B, S, H * hd) @ p["attn"]["wo"],
+                      "batch", None, None)
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + L.gelu_mlp(p["mlp"], h), None
+
+    if util.remat_enabled():
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = util.scan(layer, x, params["encoder"])
+    return L.rms_norm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def _cross_attention(cfg, p, h, cross_k, cross_v):
+    B, S, D = h.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    o = L.flash_attention(q, cross_k, cross_v, causal=False)
+    return shard(o.reshape(B, S, H * hd) @ p["wo"], "batch", None, None)
+
+
+def build_cross_kv(cfg: ArchConfig, params, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    B, Se, D = enc_out.shape
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def layer(_, p):
+        kv = enc_out @ p["cross_attn"]["wkv"]
+        k, v = jnp.split(kv, 2, axis=-1)
+        return None, (k.reshape(B, Se, K, hd), v.reshape(B, Se, K, hd))
+
+    _, (ks, vs) = util.scan(layer, None, params["decoder"])
+    return {"k": ks, "v": vs}  # [nd, B, Se, K, hd]
+
+
+def _decoder_blocks(cfg, params, x, *, positions, cross_kv, cache=None):
+    def block(carry, inp):
+        x, step_len = carry
+        if cache is None:
+            p, (ck, cv) = inp
+            self_cache = None
+        else:
+            p, (ck, cv), (sk, sv) = inp
+            self_cache = {"k": sk, "v": sv, "len": step_len}
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        h, kv_new = L.gqa_attention(cfg, p["self_attn"], h,
+                                    positions=positions, cache=self_cache)
+        x = x + h
+        h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+        x = x + _cross_attention(cfg, p["cross_attn"], h, ck, cv)
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.gelu_mlp(p["mlp"], h)
+        out = None if kv_new is None else (kv_new["k"], kv_new["v"])
+        return (x, step_len), out
+
+    if cache is None:
+        blk = block
+        if util.remat_enabled():
+            blk = jax.checkpoint(
+                blk, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, _), _ = util.scan(blk, (x, None),
+                              (params["decoder"],
+                               (cross_kv["k"], cross_kv["v"])))
+        return x, None
+    (x, _), new_kv = util.scan(
+        block, (x, cache["len"]),
+        (params["decoder"], (cross_kv["k"], cross_kv["v"]),
+         (cache["self_kv"]["k"], cache["self_kv"]["v"])))
+    new_cache = {"len": cache["len"] + x.shape[1],
+                 "self_kv": {"k": new_kv[0], "v": new_kv[1]},
+                 "cross_kv": cross_kv}
+    return x, new_cache
+
+
+def forward_hidden(cfg: ArchConfig, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    cross_kv = build_cross_kv(cfg, params, enc_out)
+    x = L.embed_tokens(params, batch["tokens"], cfg.d_model)
+    positions = jnp.arange(x.shape[1])
+    x, _ = _decoder_blocks(cfg, params, x, positions=positions,
+                           cross_kv=cross_kv)
+    return L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+def forward_train(cfg: ArchConfig, params, batch):
+    """batch: frames [B, enc_seq, D], tokens/labels/mask [B, S]."""
+    x = forward_hidden(cfg, params, batch)
+    return L.chunked_cross_entropy(_logits_fn(cfg, params), x,
+                                   batch["labels"], batch["mask"])
+
+
+def forward_logits(cfg: ArchConfig, params, batch):
+    return _logits_fn(cfg, params)(forward_hidden(cfg, params, batch))
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens):
+    x = L.embed_tokens(params, tokens, cfg.d_model)
+    positions = cache["len"][:, None] + jnp.arange(tokens.shape[1])[None]
+    x, new_cache = _decoder_blocks(cfg, params, x, positions=positions,
+                                   cross_kv=cache["cross_kv"], cache=cache)
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return _logits_fn(cfg, params)(x), new_cache

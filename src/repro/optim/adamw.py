@@ -1,0 +1,125 @@
+"""AdamW with global-norm clipping and optional ZeRO-1 moment sharding.
+
+Pure-JAX (no optax dependency): moments in f32, params may be bf16.
+ZeRO-1: optimizer moments are additionally sharded over the `data` axis on
+the largest dimension not already model-sharded (helper below), cutting
+optimizer memory by the DP degree -- the standard distributed-optimizer
+trick at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.base import ParamSpec
+from repro.dist.sharding import resolve_pspec
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        step_vec = mhat / (jnp.sqrt(nhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_vec).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, metrics
+
+
+# --------------------------------------------------- ZeRO-1 moment specs ---
+
+def zero1_pspec(spec: ParamSpec, data_divisor: int) -> tuple:
+    """Moment partition spec: param spec + `data` on the largest
+    still-replicated, divisible dim (ZeRO-1)."""
+    entries = list(spec.pspec)
+    if "data" in entries:  # already FSDP/EP-sharded over data (e.g. MoE)
+        return tuple(entries)
+    best, best_size = None, 0
+    for i, (dim, e) in enumerate(zip(spec.shape, entries)):
+        if e is None and dim % data_divisor == 0 and dim > best_size:
+            best, best_size = i, dim
+    if best is not None:
+        entries[best] = "data"
+    return tuple(entries)
+
+
+def moment_shardings(structure, mesh: Mesh, zero1: bool = True):
+    """NamedSharding tree for mu/nu given the ParamSpec structure."""
+    data = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+
+    def one(s: ParamSpec):
+        pspec = zero1_pspec(s, data) if zero1 else s.pspec
+        return NamedSharding(mesh, resolve_pspec(pspec, mesh, s.shape))
+
+    tree = jax.tree.map(one, structure,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+    return {"mu": tree, "nu": tree,
+            "step": NamedSharding(mesh, P())}

@@ -1,0 +1,11 @@
+"""Functional bitplane simulator of the computing-SRAM substrate.
+
+Validates the *semantics* of both layouts (the cycle costs live in
+`repro.core`): multi-row activation logic, bit-serial arithmetic, the
+transpose unit, and the paper's case-study programs (AES, Keccak pi, FIR).
+"""
+from repro.pim.array_sim import CSArray  # noqa: F401
+from repro.pim.bitserial import (  # noqa: F401
+    bs_add, bs_mult, bs_mux, bs_sub, pack, unpack,
+)
+from repro.pim.transpose_sim import bp_to_bs, bs_to_bp  # noqa: F401

@@ -1,0 +1,284 @@
+"""Functional AES-128 under BP, BS, and hybrid layouts (paper Sec. 5.4).
+
+Three interchangeable executions of the round function:
+
+* **BP**: the state is a vector of 16 bytes (one byte per word-PE).
+  SubBytes is a table lookup (costed as composite-field GF inversion in the
+  cycle model), ShiftRows a logical remap, MixColumns word-level xtime.
+* **BS**: the state is 8 bitplanes x 16 columns (EP-BS). SubBytes is a
+  *bit-sliced* GF(2^8) inversion (Fermat chain: 7 squarings + 6 multiplies,
+  AND/XOR plane ops only) + affine map -- the layout the paper credits with
+  the 115-gate Boyar-Peralta cost. ShiftRows is a physical column shuffle.
+* **Hybrid**: BP everywhere, transposing to BS for SubBytes and back --
+  the paper's winning schedule.
+
+All three must encrypt identically; validated against a from-scratch
+reference and the FIPS-197 vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pim.bitserial import pack, unpack
+from repro.pim.transpose_sim import bp_to_bs, bs_to_bp
+
+AES_POLY = 0x11B  # x^8 + x^4 + x^3 + x + 1
+
+
+# ------------------------------------------------------------------ GF(2^8)
+
+def gf_mul_int(a: int, b: int) -> int:
+    r = 0
+    while b:
+        if b & 1:
+            r ^= a
+        a <<= 1
+        if a & 0x100:
+            a ^= AES_POLY
+        b >>= 1
+    return r
+
+
+@functools.lru_cache(None)
+def sbox_table() -> tuple:
+    """Generate the AES S-box from GF inversion + affine (FIPS-197)."""
+    inv = [0] * 256
+    for x in range(1, 256):
+        # brute-force inverse (table generation happens once, host-side)
+        for y in range(1, 256):
+            if gf_mul_int(x, y) == 1:
+                inv[x] = y
+                break
+    out = []
+    for x in range(256):
+        v = inv[x]
+        b = 0
+        for i in range(8):
+            bit = ((v >> i) ^ (v >> ((i + 4) % 8)) ^ (v >> ((i + 5) % 8))
+                   ^ (v >> ((i + 6) % 8)) ^ (v >> ((i + 7) % 8))
+                   ^ (0x63 >> i)) & 1
+            b |= bit << i
+        out.append(b)
+    return tuple(out)
+
+
+# --------------------------------------------------- bit-sliced GF algebra --
+
+def _bs_gf_mult(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Bit-sliced carry-less multiply + modular reduction by AES_POLY.
+    a, b: (8, n) planes -> (8, n) planes. AND/XOR plane ops only."""
+    n = a.shape[1]
+    t = [jnp.zeros((n,), bool) for _ in range(15)]
+    for i in range(8):
+        for j in range(8):
+            t[i + j] = jnp.logical_xor(t[i + j],
+                                       jnp.logical_and(a[i], b[j]))
+    # reduce x^k for k = 14..8: x^8 = x^4 + x^3 + x + 1
+    for k in range(14, 7, -1):
+        r = t[k]
+        for off in (4, 3, 1, 0):
+            t[k - 8 + off] = jnp.logical_xor(t[k - 8 + off], r)
+        t[k] = jnp.zeros((n,), bool)
+    return jnp.stack(t[:8])
+
+
+def _bs_gf_square(a: jax.Array) -> jax.Array:
+    """Squaring is linear in GF(2^8): spread bits then reduce."""
+    n = a.shape[1]
+    t = [jnp.zeros((n,), bool) for _ in range(15)]
+    for i in range(8):
+        t[2 * i] = a[i]
+    for k in range(14, 7, -1):
+        r = t[k]
+        for off in (4, 3, 1, 0):
+            t[k - 8 + off] = jnp.logical_xor(t[k - 8 + off], r)
+        t[k] = jnp.zeros((n,), bool)
+    return jnp.stack(t[:8])
+
+
+def bs_gf_inverse(a: jax.Array) -> jax.Array:
+    """x^254 by the Fermat chain: product of x^(2^i), i=1..7.
+    (Functionally identical to -- though not gate-optimal like -- the
+    115-gate Boyar-Peralta circuit the cost model charges.)"""
+    sq = _bs_gf_square(a)  # x^2
+    prod = sq
+    cur = sq
+    for _ in range(6):  # x^4 ... x^128
+        cur = _bs_gf_square(cur)
+        prod = _bs_gf_mult(prod, cur)
+    return prod
+
+
+def bs_sub_bytes(planes: jax.Array) -> jax.Array:
+    """Bit-sliced S-box: inversion + affine transform, planes (8, n)."""
+    inv = bs_gf_inverse(planes)
+    out = []
+    for i in range(8):
+        b = inv[i]
+        for off in (4, 5, 6, 7):
+            b = jnp.logical_xor(b, inv[(i + off) % 8])
+        if (0x63 >> i) & 1:
+            b = jnp.logical_not(b)
+        out.append(b)
+    return jnp.stack(out)
+
+
+# ------------------------------------------------------------ BP primitives
+
+# state laid out column-major (FIPS): index = r + 4c;
+# ShiftRows: new[r + 4c] = old[r + 4*((c + r) % 4)]
+_SR = np.zeros(16, dtype=np.int32)
+for _c in range(4):
+    for _r in range(4):
+        _SR[_r + 4 * _c] = _r + 4 * ((_c + _r) % 4)
+
+
+def bp_sub_bytes(state: jax.Array) -> jax.Array:
+    table = jnp.asarray(sbox_table(), dtype=jnp.uint8)
+    return table[state]
+
+
+def shift_rows(state: jax.Array) -> jax.Array:
+    """Logical remap in BP (zero-cost address change in the cost model)."""
+    return state[jnp.asarray(_SR)]
+
+
+def bp_xtime(b: jax.Array) -> jax.Array:
+    hi = (b & 0x80) != 0
+    return jnp.where(hi, ((b << 1) ^ 0x1B) & 0xFF, (b << 1) & 0xFF
+                     ).astype(jnp.uint8)
+
+
+def bp_mix_columns(state: jax.Array) -> jax.Array:
+    # state index r + 4c -> reshape to (c, r) then transpose to s[r, c]
+    s = state.reshape(4, 4).T
+    a0, a1, a2, a3 = s[0], s[1], s[2], s[3]
+    x0, x1, x2, x3 = bp_xtime(a0), bp_xtime(a1), bp_xtime(a2), bp_xtime(a3)
+    r0 = x0 ^ (x1 ^ a1) ^ a2 ^ a3
+    r1 = a0 ^ x1 ^ (x2 ^ a2) ^ a3
+    r2 = a0 ^ a1 ^ x2 ^ (x3 ^ a3)
+    r3 = (x0 ^ a0) ^ a1 ^ a2 ^ x3
+    return jnp.stack([r0, r1, r2, r3]).T.reshape(-1).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------- BS round stages
+
+def bs_shift_rows(planes: jax.Array) -> jax.Array:
+    """Physical column shuffle in EP-BS (costed as inter-column moves)."""
+    return planes[:, jnp.asarray(_SR)]
+
+
+def _bs_xtime(planes: jax.Array) -> jax.Array:
+    n = planes.shape[1]
+    hi = planes[7]
+    out = [jnp.zeros((n,), bool)] + [planes[i] for i in range(7)]
+    for i in (0, 1, 3, 4):  # 0x1B taps
+        out[i] = jnp.logical_xor(out[i], hi)
+    return jnp.stack(out)
+
+
+def bs_mix_columns(planes: jax.Array) -> jax.Array:
+    cols = planes.reshape(8, 4, 4)  # (bit, col, row) with index r + 4c
+    a = [cols[:, :, r] for r in range(4)]
+    x = [_bs_xtime(ai) for ai in a]
+    X = jnp.logical_xor
+    r0 = X(X(x[0], X(x[1], a[1])), X(a[2], a[3]))
+    r1 = X(X(a[0], x[1]), X(X(x[2], a[2]), a[3]))
+    r2 = X(X(a[0], a[1]), X(x[2], X(x[3], a[3])))
+    r3 = X(X(X(x[0], a[0]), a[1]), X(a[2], x[3]))
+    return jnp.stack([r0, r1, r2, r3], axis=-1).reshape(8, 16)
+
+
+def bs_add_round_key(planes: jax.Array, rk_planes: jax.Array) -> jax.Array:
+    return jnp.logical_xor(planes, rk_planes)
+
+
+# ------------------------------------------------------------- key schedule
+
+def expand_key(key: np.ndarray) -> np.ndarray:
+    """FIPS-197 key expansion (host-side; 11 round keys of 16 bytes)."""
+    sbox = sbox_table()
+    rcon = [0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1B, 0x36]
+    w = [list(key[4 * i:4 * i + 4]) for i in range(4)]
+    for i in range(4, 44):
+        temp = list(w[i - 1])
+        if i % 4 == 0:
+            temp = temp[1:] + temp[:1]
+            temp = [sbox[b] for b in temp]
+            temp[0] ^= rcon[i // 4 - 1]
+        w.append([a ^ b for a, b in zip(w[i - 4], temp)])
+    rks = np.array(w, dtype=np.uint8).reshape(11, 16)
+    return rks
+
+
+# ------------------------------------------------------------- full ciphers
+
+def encrypt_bp(plaintext: np.ndarray, key: np.ndarray) -> np.ndarray:
+    rks = expand_key(key)
+    s = jnp.asarray(plaintext, dtype=jnp.uint8)
+    s = s ^ jnp.asarray(rks[0])
+    for r in range(1, 11):
+        s = bp_sub_bytes(s)
+        s = shift_rows(s)
+        if r < 10:
+            s = bp_mix_columns(s)
+        s = s ^ jnp.asarray(rks[r])
+    return np.asarray(s)
+
+
+def encrypt_bs(plaintext: np.ndarray, key: np.ndarray) -> np.ndarray:
+    rks = expand_key(key)
+    p = pack(jnp.asarray(plaintext, dtype=jnp.uint32), 8)
+    p = bs_add_round_key(p, pack(jnp.asarray(rks[0], jnp.uint32), 8))
+    for r in range(1, 11):
+        p = bs_sub_bytes(p)
+        p = bs_shift_rows(p)
+        if r < 10:
+            p = bs_mix_columns(p)
+        p = bs_add_round_key(p, pack(jnp.asarray(rks[r], jnp.uint32), 8))
+    return np.asarray(unpack(p), dtype=np.uint8)
+
+
+def encrypt_hybrid(plaintext: np.ndarray, key: np.ndarray) -> np.ndarray:
+    """The paper's schedule: BS for SubBytes, BP for everything else, with
+    explicit layout transpositions at the phase boundaries."""
+    rks = expand_key(key)
+    s = jnp.asarray(plaintext, dtype=jnp.uint8) ^ jnp.asarray(rks[0])
+    for r in range(1, 11):
+        planes = bp_to_bs(s.astype(jnp.uint32), 8)  # transpose BP->BS
+        planes = bs_sub_bytes(planes)
+        s = bs_to_bp(planes).astype(jnp.uint8)  # transpose BS->BP
+        s = shift_rows(s)
+        if r < 10:
+            s = bp_mix_columns(s)
+        s = s ^ jnp.asarray(rks[r])
+    return np.asarray(s)
+
+
+# ------------------------------------------------------------ pure-Py oracle
+
+def encrypt_reference(plaintext: np.ndarray, key: np.ndarray) -> np.ndarray:
+    """Independent from-scratch AES-128 on Python ints (the oracle)."""
+    sbox = sbox_table()
+    rks = expand_key(key)
+    s = [int(b) for b in plaintext]
+    s = [a ^ int(b) for a, b in zip(s, rks[0])]
+    for rnd in range(1, 11):
+        s = [sbox[b] for b in s]
+        s = [s[(r + 4 * ((c + r) % 4))] for c in range(4) for r in range(4)]
+        s2 = list(s)
+        if rnd < 10:
+            t = list(s2)
+            for c in range(4):
+                a = t[4 * c:4 * c + 4]
+                xt = [gf_mul_int(v, 2) for v in a]
+                s2[4 * c + 0] = xt[0] ^ (xt[1] ^ a[1]) ^ a[2] ^ a[3]
+                s2[4 * c + 1] = a[0] ^ xt[1] ^ (xt[2] ^ a[2]) ^ a[3]
+                s2[4 * c + 2] = a[0] ^ a[1] ^ xt[2] ^ (xt[3] ^ a[3])
+                s2[4 * c + 3] = (xt[0] ^ a[0]) ^ a[1] ^ a[2] ^ xt[3]
+        s = [a ^ int(b) for a, b in zip(s2, rks[rnd])]
+    return np.array(s, dtype=np.uint8)

@@ -1,0 +1,73 @@
+"""Functional bitline simulator of the Computing SRAM Array (paper Fig. 1).
+
+State is a (rows, cols) boolean JAX array. Multi-row activation discharges
+each bitline through the selected cells: the sense amplifier on BL reads the
+AND of the activated rows; the complementary bitline reads their NOR; an
+extra gate yields XOR. All columns compute in parallel -- exactly the
+in-SRAM computing primitive the cost model charges one cycle for.
+
+This layer validates *semantics*; cycles live in `repro.core.cost_model`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class CSArray:
+    """One computing SRAM array (default 128 x 512)."""
+
+    cells: jax.Array  # (rows, cols) bool
+
+    @classmethod
+    def zeros(cls, rows: int = 128, cols: int = 512) -> "CSArray":
+        return cls(jnp.zeros((rows, cols), dtype=bool))
+
+    @property
+    def rows(self) -> int:
+        return self.cells.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.cells.shape[1]
+
+    # -- row access ---------------------------------------------------------
+    def write_row(self, r: int, bits: jax.Array) -> "CSArray":
+        return CSArray(self.cells.at[r].set(bits.astype(bool)))
+
+    def read_row(self, r: int) -> jax.Array:
+        return self.cells[r]
+
+    # -- multi-row activation primitives (Fig. 1) ----------------------------
+    def activate_and(self, r0: int, r1: int) -> jax.Array:
+        """BL sense: high only if every activated cell stores 1."""
+        return jnp.logical_and(self.cells[r0], self.cells[r1])
+
+    def activate_nor(self, r0: int, r1: int) -> jax.Array:
+        """Complementary bitline sense: high iff all activated cells store 0."""
+        return jnp.logical_not(jnp.logical_or(self.cells[r0], self.cells[r1]))
+
+    def activate_xor(self, r0: int, r1: int) -> jax.Array:
+        """NOR(AND, NOR) of the two sensed values (Fig. 1b)."""
+        a = self.activate_and(r0, r1)
+        n = self.activate_nor(r0, r1)
+        return jnp.logical_not(jnp.logical_or(a, n))
+
+    def activate_or(self, r0: int, r1: int) -> jax.Array:
+        return jnp.logical_not(self.activate_nor(r0, r1))
+
+    # -- fused op-and-writeback (one compute cycle in the cost model) --------
+    def op_into(self, op: str, r0: int, r1: int, dst: int) -> "CSArray":
+        res = {
+            "and": self.activate_and,
+            "or": self.activate_or,
+            "nor": self.activate_nor,
+            "xor": self.activate_xor,
+        }[op](r0, r1)
+        return CSArray(self.cells.at[dst].set(res))
+
+    def not_into(self, src: int, dst: int) -> "CSArray":
+        return CSArray(self.cells.at[dst].set(jnp.logical_not(self.cells[src])))

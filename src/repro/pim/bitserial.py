@@ -1,0 +1,139 @@
+"""Bit-serial (BS) arithmetic on vertical bitplanes.
+
+Data layout: an N-bit vector of `n` elements is a (N, n) boolean array --
+plane k holds bit k (LSB first) of every element, one element per column
+(EP-BS, Fig. 2b). Arithmetic follows the BS peripheral of Sec. 4.1: a 1-cycle
+full adder per bit plane, free shifts (row renaming), and MUX synthesized
+from AND/OR/NOT (the 4-cycle penalty in the cost model).
+
+Everything is pure JAX so the simulator vmaps/jits across arrays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack(values: jax.Array, width: int) -> jax.Array:
+    """Integers (n,) -> bitplanes (width, n), LSB first."""
+    values = values.astype(jnp.uint32)
+    ks = jnp.arange(width, dtype=jnp.uint32)
+    return ((values[None, :] >> ks[:, None]) & 1).astype(bool)
+
+
+def unpack(planes: jax.Array) -> jax.Array:
+    """Bitplanes (width, n) -> integers (n,) (unsigned)."""
+    width = planes.shape[0]
+    ks = jnp.arange(width, dtype=jnp.uint32)
+    return jnp.sum(planes.astype(jnp.uint32) << ks[:, None], axis=0)
+
+
+def full_adder(a: jax.Array, b: jax.Array, c: jax.Array):
+    """(sum, carry) of three bit planes -- the 1-cycle BS hardware adder."""
+    s = jnp.logical_xor(jnp.logical_xor(a, b), c)
+    cout = (a & b) | (c & (a ^ b))
+    return s, cout
+
+
+def bs_add(a: jax.Array, b: jax.Array, out_width: int | None = None):
+    """Ripple add over planes: one full-adder cycle per bit (Table 2)."""
+    w = a.shape[0]
+    ow = out_width or w
+    n = a.shape[1]
+    carry = jnp.zeros((n,), bool)
+    outs = []
+    for k in range(ow):
+        ak = a[k] if k < w else jnp.zeros((n,), bool)
+        bk = b[k] if k < b.shape[0] else jnp.zeros((n,), bool)
+        s, carry = full_adder(ak, bk, carry)
+        outs.append(s)
+    return jnp.stack(outs)
+
+
+def bs_neg(a: jax.Array) -> jax.Array:
+    """Two's complement: invert + add 1 (w adder cycles)."""
+    inv = jnp.logical_not(a)
+    one = jnp.zeros_like(a).at[0].set(True)
+    return bs_add(inv, one)
+
+
+def bs_sub(a: jax.Array, b: jax.Array) -> jax.Array:
+    return bs_add(a, bs_neg(b))
+
+
+def bs_shift_up(a: jax.Array, k: int) -> jax.Array:
+    """Multiply by 2^k via row renaming -- zero cycles in the cost model."""
+    w, n = a.shape
+    if k == 0:
+        return a
+    pad = jnp.zeros((k, n), bool)
+    return jnp.concatenate([pad, a], axis=0)
+
+
+def bs_mult(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Shift-and-add multiply: w partial products, each masked by a bit of b
+    and accumulated with the serial adder (w^2 cycles total)."""
+    w, n = a.shape
+    ow = 2 * w
+    acc = jnp.zeros((ow, n), bool)
+    for k in range(w):
+        partial = bs_shift_up(a, k)[:ow]
+        if partial.shape[0] < ow:
+            partial = jnp.concatenate(
+                [partial, jnp.zeros((ow - partial.shape[0], n), bool)])
+        masked = jnp.logical_and(partial, b[k][None, :])
+        acc = bs_add(acc, masked)
+    return acc
+
+
+def bs_mux(cond: jax.Array, t: jax.Array, f: jax.Array) -> jax.Array:
+    """Per-bit synthesized MUX (4 primitive gates per plane -- the Table-2
+    4-cycle penalty): out = (t AND c) OR (f AND NOT c)."""
+    c = cond[None, :] if cond.ndim == 1 else cond
+    return jnp.logical_or(jnp.logical_and(t, c),
+                          jnp.logical_and(f, jnp.logical_not(c)))
+
+
+def bs_ge0(a: jax.Array) -> jax.Array:
+    """Sign-bit read: 1 cycle (Table 5 ge_0/BS)."""
+    return jnp.logical_not(a[-1])
+
+
+def bs_abs(a: jax.Array) -> jax.Array:
+    neg = bs_neg(a)
+    return bs_mux(a[-1], neg, a)
+
+
+def bs_min(a: jax.Array, b: jax.Array) -> jax.Array:
+    """sub + per-bit MUX select (6w cycles in the cost model)."""
+    d = bs_sub(a, b)
+    a_lt_b = d[-1]
+    return bs_mux(a_lt_b, a, b)
+
+
+def bs_max(a: jax.Array, b: jax.Array) -> jax.Array:
+    d = bs_sub(a, b)
+    a_lt_b = d[-1]
+    return bs_mux(a_lt_b, b, a)
+
+
+def bs_equal(a: jax.Array, b: jax.Array) -> jax.Array:
+    """serial XOR + OR-reduce (2w+1 cycles)."""
+    x = jnp.logical_xor(a, b)
+    return jnp.logical_not(jnp.any(x, axis=0))
+
+
+def bs_relu(a: jax.Array) -> jax.Array:
+    return jnp.logical_and(a, bs_ge0(a)[None, :])
+
+
+def bs_popcount(a: jax.Array, out_width: int | None = None) -> jax.Array:
+    """Serial summation of bit planes (5w-cycle class)."""
+    w, n = a.shape
+    ow = out_width or max(1, w.bit_length())
+    acc = jnp.zeros((ow, n), bool)
+    one_w = 1
+    for k in range(w):
+        bit = jnp.zeros((ow, n), bool).at[0].set(a[k])
+        acc = bs_add(acc, bit)
+    return acc

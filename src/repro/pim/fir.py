@@ -1,0 +1,31 @@
+"""FIR filter on the PIM scratchpad (Challenge 2).
+
+Direct-form N-tap FIR: a sliding window of past samples plus coefficients
+and intermediate products -- the 11-live-word working set the paper uses to
+demonstrate BS row overflow. The BP functional model keeps every word-level
+variable in its own row; this module validates the arithmetic against
+np.convolve.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fir_bp(samples: jax.Array, coeffs: jax.Array) -> jax.Array:
+    """Word-level (BP) execution: state rows shift, 4 MACs per sample."""
+    taps = coeffs.shape[0]
+
+    def step(state, x):
+        state = jnp.concatenate([x[None], state[:-1]])
+        y = jnp.sum(state * coeffs)
+        return state, y
+
+    init = jnp.zeros((taps,), samples.dtype)
+    _, ys = jax.lax.scan(step, init, samples)
+    return ys
+
+
+def fir_reference(samples: np.ndarray, coeffs: np.ndarray) -> np.ndarray:
+    return np.convolve(samples, coeffs)[: len(samples)]

@@ -1,0 +1,54 @@
+"""Keccak pi-stage permutation: logical vs physical shuffle (Challenge 3).
+
+pi: A'[x, y] = A[(x + 3y) mod 5, x]  (lane-level permutation of the 5x5x64
+state). In ES-BP the permutation is a *logical* shuffle -- an address remap
+with zero data movement. In EP-BS the lanes live in different columns, so
+the same permutation is a *physical* shuffle: explicit lane-by-lane copies
+through a scratch buffer. Both must produce identical states.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pi_index_map() -> np.ndarray:
+    """dst lane (x, y) <- src lane ((x + 3y) % 5, x), flattened as x + 5y."""
+    idx = np.zeros(25, dtype=np.int32)
+    for x in range(5):
+        for y in range(5):
+            sx, sy = (x + 3 * y) % 5, x
+            idx[x + 5 * y] = sx + 5 * sy
+    return idx
+
+
+def pi_logical(state: jax.Array) -> jax.Array:
+    """Zero-cost address remap (ES-BP): one gather, no element writes."""
+    return state[jnp.asarray(pi_index_map())]
+
+
+def pi_physical(state: jax.Array) -> jax.Array:
+    """Explicit lane-by-lane copy through a scratch buffer (EP-BS): the
+    sequence of inter-column transfers the BS cost model charges."""
+    idx = pi_index_map()
+    out = jnp.zeros_like(state)
+    for dst in range(25):
+        lane = state[idx[dst]]  # read source lane to the transfer buffer
+        out = out.at[dst].set(lane)  # write to destination column group
+    return out
+
+
+def theta(state: jax.Array) -> jax.Array:
+    """theta stage (used by tests to check pi composes into a real round):
+    C[x] = xor of column lanes; D[x] = C[x-1] ^ rot(C[x+1], 1)."""
+    lanes = state.reshape(5, 5)  # [y, x] with index x + 5y
+    C = lanes[0]
+    for y in range(1, 5):
+        C = C ^ lanes[y]
+    D = jnp.stack([
+        C[(x - 1) % 5] ^ jnp.bitwise_or(
+            (C[(x + 1) % 5] << 1), (C[(x + 1) % 5] >> 63)).astype(C.dtype)
+        for x in range(5)
+    ])
+    return (lanes ^ D[None, :]).reshape(25)

@@ -1,0 +1,30 @@
+"""Functional model of the on-chip transpose unit (paper Sec. 4.1).
+
+BP form: words along rows (one W-bit word per row slice).
+BS form: bitplanes (W, n) with one element per column.
+
+The hardware reads M rows (BP) or N rows (BS), flows them through the
+bit/word transposer (1 core cycle), and writes the other form -- here we
+reproduce the data movement exactly so layouts can be switched mid-program,
+as the hybrid scheduler assumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.pim.bitserial import pack, unpack
+
+
+def bp_to_bs(words: jax.Array, width: int) -> jax.Array:
+    """(n,) unsigned words -> (width, n) bitplanes."""
+    return pack(words, width)
+
+
+def bs_to_bp(planes: jax.Array) -> jax.Array:
+    """(width, n) bitplanes -> (n,) unsigned words."""
+    return unpack(planes)
+
+
+def round_trip(words: jax.Array, width: int) -> jax.Array:
+    return bs_to_bp(bp_to_bs(words, width))

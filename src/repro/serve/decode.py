@@ -1,0 +1,58 @@
+"""Batched serving: prefill + greedy decode over the model zoo.
+
+`decode_step` handles S >= 1 token writes, so prefill is just a wide decode
+onto an empty cache; generation then proceeds one token per step. The
+request batcher pads a set of prompts to a common length and serves them as
+one batch (continuous batching at real scale slots new requests into
+finished cache rows; the slot logic is the same dynamic-update the cache
+already uses).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_params, registry
+from repro.models.base import ArchConfig
+
+
+@dataclasses.dataclass
+class ServeSession:
+    cfg: ArchConfig
+    params: dict
+    max_len: int
+
+    def __post_init__(self):
+        self.fns = registry.model_fns(self.cfg)
+        self._decode = jax.jit(
+            lambda p, c, t: self.fns.decode_step(self.cfg, p, c, t))
+
+    def _empty_cache(self, batch: int):
+        return init_params(
+            self.fns.cache_structure(self.cfg, batch, self.max_len),
+            jax.random.key(0))
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 max_new_tokens: int = 8) -> list[list[int]]:
+        B = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p  # left-pad
+        cache = self._empty_cache(B)
+        logits, cache = self._decode(self.params, cache,
+                                     jnp.asarray(toks))  # prefill
+        out = [list(p) for p in prompts]
+        cur = jnp.argmax(logits[:, -1:, : self.cfg.vocab_size], axis=-1
+                         ).astype(jnp.int32)
+        for _ in range(max_new_tokens):
+            for i in range(B):
+                out[i].append(int(cur[i, 0]))
+            logits, cache = self._decode(self.params, cache, cur)
+            cur = jnp.argmax(logits[:, -1:, : self.cfg.vocab_size], axis=-1
+                             ).astype(jnp.int32)
+        return out

@@ -1,0 +1,90 @@
+"""Train / serve step builders: the functions the launcher jits and the
+dry-run lowers.
+
+`make_train_step(cfg)` returns
+    step(params, opt_state, batch) -> (params, opt_state, metrics)
+with optional gradient accumulation (microbatching) and remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.models.base import ArchConfig
+from repro.optim import adamw
+
+
+def make_loss_fn(cfg: ArchConfig):
+    fns = registry.model_fns(cfg)
+
+    def loss_fn(params, batch):
+        return fns.forward_train(cfg, params, batch)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt: adamw.AdamWConfig, *,
+                    remat: bool = True, microbatches: int = 1):
+    from repro import util
+    loss_fn = make_loss_fn(cfg)
+    util.set_remat(remat)  # per-layer remat inside the block scans
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(i):
+                mb = jax.tree.map(
+                    lambda x: x.reshape(microbatches, -1, *x.shape[1:])[i],
+                    batch)
+                return jax.value_and_grad(loss_fn)(params, mb)
+
+            def body(carry, i):
+                tot_loss, acc = carry
+                l, g = micro(i)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (tot_loss + l, acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0), zeros), jnp.arange(microbatches))
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt_state, metrics = adamw.update(opt, grads, opt_state,
+                                                  params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """Prefill: hidden states over the prompt, next-token logits only (full
+    [B, S, V] logits are never materialized)."""
+    fns = registry.model_fns(cfg)
+
+    def prefill_step(params, batch):
+        x = fns.forward_hidden(cfg, params, batch)  # [B, S, D]
+        from repro.models.transformer import _logits_fn
+        return _logits_fn(cfg, params)(x[:, -1:, :])
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    fns = registry.model_fns(cfg)
+
+    def serve_step(params, cache, tokens):
+        """One new token per sequence with the KV/SSM cache: the function
+        the decode_* dry-run shapes lower."""
+        logits, cache = fns.decode_step(cfg, params, cache, tokens)
+        next_tok = jnp.argmax(
+            logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step

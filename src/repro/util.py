@@ -1,0 +1,89 @@
+"""Cross-cutting knobs: scan unrolling (HLO cost counting) and remat.
+
+XLA's cost analysis counts a `while` body ONCE, not x trip-count, so a
+scanned-layers model under-reports FLOPs/bytes/collectives. The dry-run's
+counting pass therefore lowers reduced-depth configs with
+``REPRO_UNROLL_SCANS=1`` -- every `util.scan` becomes a Python loop, the HLO
+contains no while ops, and cost analysis is exact -- then extrapolates
+linearly in depth (layers are homogeneous). See launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_REMAT = False
+
+
+def set_remat(value: bool) -> None:
+    """Per-layer rematerialization for the training step (set by
+    make_train_step before tracing)."""
+    global _REMAT
+    _REMAT = bool(value)
+
+
+def remat_enabled() -> bool:
+    return _REMAT
+
+
+def unroll_scans() -> bool:
+    return os.environ.get("REPRO_UNROLL_SCANS", "") == "1"
+
+
+def flash_chunk_default() -> int:
+    return int(os.environ.get("REPRO_FLASH_CHUNK", "512"))
+
+
+def attn_bf16_matmuls() -> bool:
+    """Perf lever: bf16 QK/PV matmuls with f32 softmax state (the paper's
+    precision-vs-layout trade applied to attention operand width)."""
+    return os.environ.get("REPRO_ATTN_BF16", "") == "1"
+
+
+def fused_attention_accounting() -> bool:
+    """Perf lever: account flash-internal tensors as VMEM-resident (the
+    Pallas kernel in kernels/flash_attention.py), excluding them from the
+    boundary-bytes memory term."""
+    return os.environ.get("REPRO_FUSED_ATTN", "") == "1"
+
+
+def moe_bf16_dispatch() -> bool:
+    """Perf lever: bf16 dispatch/combine one-hots (exactly representable)."""
+    return os.environ.get("REPRO_MOE_BF16_DISPATCH", "") == "1"
+
+
+def moe_two_step_reshard() -> bool:
+    """Perf lever: explicit g(data)->e(data) dim exchange so SPMD emits
+    all-to-all for MoE token routing instead of all-reduce+all-gather."""
+    return os.environ.get("REPRO_MOE_A2A", "") == "1"
+
+
+def bf16_allreduce_barrier() -> bool:
+    """Perf lever: optimization_barrier after residual adds, preventing XLA
+    from hoisting the rms_norm f32 convert above the row-parallel psum
+    (which doubles TP all-reduce wire bytes)."""
+    return os.environ.get("REPRO_AR_BF16", "") == "1"
+
+
+def scan(f, init, xs, length=None):
+    """lax.scan, or an unrolled Python loop under REPRO_UNROLL_SCANS=1."""
+    if not unroll_scans():
+        return lax.scan(f, init, xs, length=length)
+    if xs is None:
+        n = length
+    else:
+        n = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked

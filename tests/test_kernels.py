@@ -1,0 +1,140 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (hypothesis) in
+interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bitpack import bitpack
+from repro.kernels.bitparallel_matmul import bitparallel_matmul
+from repro.kernels.bitserial_matmul import bitserial_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels import ops
+
+
+def _rand_words(rng, K, N, bits):
+    return jnp.asarray(rng.integers(0, 2 ** bits, size=(K, N),
+                                    dtype=np.uint32))
+
+
+# ------------------------------------------------------------- bitpack -----
+
+@settings(max_examples=12, deadline=None)
+@given(bits=st.sampled_from([1, 2, 4, 8]),
+       kg=st.integers(1, 4), n=st.sampled_from([8, 64, 96]))
+def test_bitpack_matches_ref(bits, kg, n):
+    rng = np.random.default_rng(bits * 100 + kg * 10 + n)
+    w = _rand_words(rng, 32 * kg, n, bits)
+    got = bitpack(w, bits)
+    want = ref.bitpack_ref(w, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitpack_roundtrip():
+    rng = np.random.default_rng(0)
+    w = _rand_words(rng, 128, 64, 4)
+    planes = bitpack(w, 4)
+    back = ref.bitunpack_ref(planes, 128)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+# -------------------------------------------------- bit-serial matmul ------
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.sampled_from([1, 2, 4]),
+       m=st.sampled_from([8, 32]), kg=st.integers(1, 3),
+       n=st.sampled_from([16, 64]))
+def test_bitserial_matmul_matches_ref(bits, m, kg, n):
+    rng = np.random.default_rng(bits + m + kg + n)
+    K = 32 * kg
+    x = jnp.asarray(rng.integers(-64, 64, size=(m, K), dtype=np.int32)
+                    ).astype(jnp.int8)
+    w = _rand_words(rng, K, n, bits)
+    planes = ref.bitpack_ref(w, bits)
+    got = bitserial_matmul(x, planes, block_m=min(32, m), block_n=min(64, n))
+    want = ref.bitserial_matmul_ref(x.astype(jnp.int32), planes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------ bit-parallel matmul ------
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([16, 64]), k=st.sampled_from([32, 128, 160]),
+       n=st.sampled_from([16, 128]))
+def test_bitparallel_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    x = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int32)
+                    ).astype(jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int32)
+                    ).astype(jnp.int8)
+    got = bitparallel_matmul(x, w, block_m=16, block_n=16, block_k=32)
+    want = ref.bitparallel_matmul_ref(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bs_equals_bp_semantics():
+    """Both layouts compute the same GEMM (the paper's iso-function claim)."""
+    rng = np.random.default_rng(7)
+    K, N, bits = 64, 32, 4
+    x = jnp.asarray(rng.integers(0, 16, (8, K), dtype=np.int32)).astype(
+        jnp.int8)
+    w = _rand_words(rng, K, N, bits)
+    planes = ref.bitpack_ref(w, bits)
+    y_bs = bitserial_matmul(x, planes, block_m=8, block_n=32)
+    y_bp = bitparallel_matmul(x, w.astype(jnp.int8), block_m=8,
+                              block_n=16, block_k=32)
+    np.testing.assert_array_equal(np.asarray(y_bs), np.asarray(y_bp))
+
+
+# --------------------------------------------------- flash attention -------
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.sampled_from([1, 2]), sq=st.sampled_from([32, 64]),
+       h=st.sampled_from([1, 2]), d=st.sampled_from([32, 64]),
+       causal=st.booleans())
+def test_flash_attention_matches_ref(b, sq, h, d, causal):
+    rng = np.random.default_rng(b + sq + h + d)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_vs_layers_streaming_attention():
+    """The Pallas kernel and the pure-JAX streaming softmax agree."""
+    from repro.models.layers import flash_attention as jflash
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 64, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 64, 4, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 64, 4, 32)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    b = jflash(q, k, v, causal=True, chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+# -------------------------------------------- layout-aware dispatch --------
+
+def test_layout_aware_matmul_dispatch():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.integers(0, 8, (128, 64), dtype=np.int32)).astype(
+        jnp.int8)
+    w2 = _rand_words(rng, 64, 128, 2)   # 2-bit, high DoP -> BS
+    y, layout = ops.layout_aware_matmul(x, w2, weight_bits=2)
+    assert layout.value == "BS"
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(x.astype(jnp.int32) @ w2.astype(jnp.int32)))
+
+    w8 = _rand_words(rng, 64, 128, 8)   # 8-bit words -> BP
+    y8, layout8 = ops.layout_aware_matmul(x, w8.astype(jnp.int32) - 0,
+                                          weight_bits=8)
+    assert layout8.value == "BP"
+    np.testing.assert_array_equal(
+        np.asarray(y8),
+        np.asarray(x.astype(jnp.int32) @ w8.astype(jnp.int8).astype(
+            jnp.int32)))

@@ -1,0 +1,127 @@
+"""Per-arch smoke tests: reduced config of the same family, one forward /
+train-grad step + decode steps on CPU; asserts shapes + no NaNs.
+(Full-size configs are exercised only via the dry-run.)"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.models import abstract_params, init_params, registry
+from repro.models.base import init_params as init_p
+
+
+def _smoke_batch(cfg, rng, batch=2, seq=16):
+    tk, lk = jax.random.split(rng)
+    b = {
+        "tokens": jax.random.randint(tk, (batch, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(lk, (batch, seq), 0, cfg.vocab_size),
+        "mask": jnp.ones((batch, seq), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        b["prefix_embeds"] = jax.random.normal(
+            tk, (batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        b["frames"] = jax.random.normal(
+            tk, (batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return b
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch_id):
+    cfg = reduced_config(get_config(arch_id))
+    fns = registry.model_fns(cfg)
+    params = init_params(fns.param_structure(cfg), jax.random.key(0))
+    return cfg, fns, params
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_and_grad_step(arch_id):
+    cfg, fns, params = _setup(arch_id)
+    batch = _smoke_batch(cfg, jax.random.key(1))
+    loss, grads = jax.value_and_grad(
+        lambda p: fns.forward_train(cfg, p, batch))(params)
+    assert np.isfinite(float(loss)), (arch_id, loss)
+    # a random model should sit near ln(vocab)
+    assert 0.2 * np.log(cfg.vocab_size) < float(loss) \
+        < 3.0 * np.log(cfg.vocab_size)
+    gnorm = jax.tree.reduce(
+        lambda a, g: a + float(jnp.sum(jnp.square(g.astype(jnp.float32)))),
+        grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_steps(arch_id):
+    cfg, fns, params = _setup(arch_id)
+    B, MAXLEN = 2, 32
+    cache = init_p(fns.cache_structure(cfg, B, MAXLEN), jax.random.key(2))
+    if cfg.family == "audio":  # cross-KV built from stub frames
+        from repro.models import whisper
+        frames = jax.random.normal(jax.random.key(3),
+                                   (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+        enc = whisper.encode(cfg, params, frames)
+        cache["cross_kv"] = whisper.build_cross_kv(cfg, params, enc)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for step in range(3):
+        logits, cache = fns.decode_step(cfg, params, cache, tok)
+        assert logits.shape == (B, 1, cfg.padded_vocab)
+        assert bool(jnp.all(jnp.isfinite(
+            logits[..., : cfg.vocab_size].astype(jnp.float32))))
+        assert int(cache["len"][0]) == step + 1
+        tok = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(
+            jnp.int32)
+
+
+@pytest.mark.parametrize("arch_id", ["tinyllama_1_1b", "mamba2_780m",
+                                     "recurrentgemma_2b"])
+def test_decode_matches_teacher_forcing(arch_id):
+    """Incremental decode must reproduce full-forward logits."""
+    cfg, fns, params = _setup(arch_id)
+    if cfg.family in ("vlm", "audio"):
+        pytest.skip("prefix models validated separately")
+    from repro.models import registry as R
+    mod = __import__(f"repro.models.{'mamba2' if cfg.family == 'ssm' else 'transformer'}",
+                     fromlist=["forward_logits"])
+    B, S = 1, 8
+    tokens = jax.random.randint(jax.random.key(4), (B, S), 0, cfg.vocab_size)
+    full = mod.forward_logits(cfg, params, {"tokens": tokens})
+    cache = init_p(fns.cache_structure(cfg, B, S), jax.random.key(5))
+    outs = []
+    for i in range(S):
+        logits, cache = fns.decode_step(cfg, params, cache, tokens[:, i:i+1])
+        outs.append(logits[:, 0])
+    inc = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(inc[..., : cfg.vocab_size], np.float32),
+        np.asarray(full[..., : cfg.vocab_size], np.float32),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_param_counts_match_published_scale():
+    """Sanity: analytic parameter counts are in the advertised ballpark."""
+    expect = {
+        "mamba2_780m": (0.6e9, 1.1e9),
+        "dbrx_132b": (115e9, 145e9),
+        "llama4_maverick_400b_a17b": (330e9, 460e9),
+        "yi_6b": (5e9, 7.5e9),
+        "tinyllama_1_1b": (0.9e9, 1.4e9),
+        "mistral_nemo_12b": (10e9, 14.5e9),
+        "stablelm_1_6b": (1.2e9, 2.1e9),
+        "internvl2_2b": (1.5e9, 2.6e9),
+        "recurrentgemma_2b": (2e9, 3.5e9),
+        "whisper_small": (0.2e9, 0.35e9),
+    }
+    for arch_id, (lo, hi) in expect.items():
+        n = registry.param_count(get_config(arch_id))
+        assert lo <= n <= hi, (arch_id, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("dbrx_132b")
+    total = registry.param_count(cfg)
+    active = registry.active_param_count(cfg)
+    assert active < 0.5 * total  # top-4 of 16 experts
+    assert active > 0.2 * total

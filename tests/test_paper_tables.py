@@ -1,0 +1,226 @@
+"""Validation of the cycle model against every published table (Tables 2-7,
+Fig. 8, and the Sec. 5.4/5.5 headline claims)."""
+import dataclasses
+
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import paper_tables as pt
+from repro.core.apps import (
+    aes_paper_accounting, aes_trace, evaluate_all, APP_TRACES,
+)
+from repro.core.cost_model import Layout, utilization, vector_add_cost
+from repro.core.microkernels import MICROKERNELS, table5_model_row
+from repro.core.params import PAPER_SYSTEM, SINGLE_ARRAY
+from repro.core.planner import (
+    hybrid_profitability_threshold, plan, transpose_sensitivity,
+)
+from repro.core.transpose import round_trip_cycles, transpose_cycles
+
+
+# ---------------------------------------------------------------- Table 2 --
+
+def test_table2_primitives():
+    assert cm.BP_LOGIC == 1 and cm.BP_ADD == 1 and cm.BP_SUB == 2
+    assert cm.bp_mult(32) == 34 and cm.bp_mult(16) == 18
+    assert cm.bp_shift(5) == 5
+    assert cm.BS_ADD1 == 1 and cm.BS_SHIFT == 0 and cm.BS_MUX1 == 4
+
+
+# ---------------------------------------------------------------- Table 3 --
+
+@pytest.mark.parametrize("kernel,expect", sorted(pt.TABLE3.items()))
+def test_table3_32bit_kernel_latency(kernel, expect):
+    model = {
+        "vector_add": (cm.BP_ADD, cm.bs_add(32)),
+        "vector_mult": (cm.bp_mult(32), cm.bs_mult(32)),
+        "min_max": (cm.minmax_bp(32), cm.minmax_bs(32)),
+        "if_then_else": (cm.if_then_else_bp(32), cm.if_then_else_bs(32)),
+    }[kernel]
+    assert model == expect
+
+
+# ---------------------------------------------------------------- Table 4 --
+
+@pytest.mark.parametrize("row", pt.TABLE4, ids=lambda r: f"n{r.elements}")
+def test_table4_vector_add_batching(row):
+    bp = vector_add_cost(Layout.BP, row.elements)
+    bs = vector_add_cost(Layout.BS, row.elements)
+    assert bp.total == row.bp_cycles
+    assert bs.total == row.bs_cycles
+    assert PAPER_SYSTEM.bp_batches(row.elements, 16) == row.bp_batches
+    assert bs.total / bp.total == pytest.approx(row.speedup, abs=0.005)
+
+
+def test_batching_neutralizes_bp_advantage():
+    """Paper Sec. 5.3: speedup monotonically decays to parity."""
+    ratios = [vector_add_cost(Layout.BS, r.elements).total
+              / vector_add_cost(Layout.BP, r.elements).total
+              for r in pt.TABLE4]
+    assert all(a >= b - 1e-9 for a, b in zip(ratios, ratios[1:]))
+    assert ratios[-1] == pytest.approx(1.0, abs=0.005)
+
+
+# ---------------------------------------------------------------- Table 5 --
+
+_T5_KERNEL_MAP = {"1b Logic": "bitweave1", "2b Logic": "bitweave2",
+                  "4b Logic": "bitweave4"}
+
+
+@pytest.mark.parametrize(
+    "row", pt.TABLE5, ids=lambda r: f"{r.kernel}-{r.mode}-{r.variant}")
+def test_table5_microkernel_breakdown(row):
+    name = _T5_KERNEL_MAP.get(row.variant, row.kernel) \
+        if row.kernel == "bitweave" else row.kernel
+    c = table5_model_row(name, Layout(row.mode))
+    assert (c.load, c.compute, c.readout) == (row.load, row.compute, row.readout)
+    assert c.total == row.total
+    if row.consistent:
+        assert row.load + row.compute + row.readout == row.total
+
+
+def test_multu_14x_claim():
+    """Sec. 5.3: BP's 18-cycle multiply is >14x faster than 256-cycle BS."""
+    assert cm.bs_mult(16) / cm.bp_mult(16) > 14
+
+
+def test_bitcount_bs_advantage():
+    """Sec. 5.3: bitcount BS 128 vs BP 185 (~1.4x)."""
+    bp = table5_model_row("bitcount", Layout.BP).total
+    bs = table5_model_row("bitcount", Layout.BS).total
+    assert (bp, bs) == (185, 128)
+    assert bp / bs == pytest.approx(1.445, abs=0.01)
+
+
+# ------------------------------------------------------- row overflow ------
+
+def test_fir_row_overflow_challenge2():
+    """11 words x 32-bit = 352 rows > 128 in BS; 11 rows in BP."""
+    s = SINGLE_ARRAY
+    assert s.bs_rows_required(11, 32, carry_rows=0) == 352
+    assert s.bs_row_overflow(11, 32)
+    assert not s.bp_row_overflow(11)
+
+
+def test_predication_row_overflow_challenge5():
+    """10 words x 32-bit = 320 rows > 128 in BS."""
+    s = SINGLE_ARRAY
+    assert s.bs_rows_required(10, 32, carry_rows=0) == 320
+    assert s.bs_row_overflow(10, 32)
+
+
+def test_keccak_es_bs_row_overflow_challenge3():
+    """25 x 64-bit lanes = 1600 rows -- ES-BS impossible."""
+    assert SINGLE_ARRAY.bs_rows_required(25, 64, carry_rows=0) == 1600
+
+
+def test_challenge1_utilization():
+    """DoP=16 @32-bit: BS uses 16/512 columns (3.1%), BP 100% (Fig. 3),
+    on the single-array configuration."""
+    assert utilization(Layout.BS, 16, 32, SINGLE_ARRAY) == pytest.approx(
+        16 / 512)
+    assert utilization(Layout.BP, 16, 32, SINGLE_ARRAY) == 1.0
+
+
+# ------------------------------------------------------------- transpose ---
+
+def test_transpose_aes_state_145_cycles():
+    assert transpose_cycles(16, 128, "bp2bs") == 145
+    assert transpose_cycles(16, 128, "bs2bp") == 145
+    assert round_trip_cycles(16, 128) == pt.AES_TOTALS["transpose_per_round"]
+
+
+# ------------------------------------------------- Table 7 / AES Sec. 5.4 --
+
+def test_table7_stage_costs():
+    from repro.core.apps import AES_STAGE
+    for stage, (bp, bs) in pt.TABLE7.items():
+        assert AES_STAGE[stage] == (bp, bs)
+    assert sum(v[0] for v in pt.TABLE7.values()) == 1888
+    assert sum(v[1] for v in pt.TABLE7.values()) == 2675
+
+
+def test_aes_published_totals():
+    acc = aes_paper_accounting()
+    assert acc["BP"] == pt.AES_TOTALS["BP"] == 18624
+    assert acc["BS"] == pt.AES_TOTALS["BS"] == 26750
+    assert acc["hybrid"] == pt.AES_TOTALS["hybrid"] == 6994
+    assert acc["per_round_hybrid"] == 725
+    assert acc["speedup"] == pytest.approx(2.66, abs=0.005)
+
+
+def test_aes_dp_planner_matches_or_beats_hand_schedule():
+    """The DP planner must reproduce the paper's hybrid structure (SubBytes
+    in BS, everything else BP) and may only be cheaper than the hand
+    schedule (it saves one transpose by ending in BS)."""
+    p = plan(aes_trace())
+    assert p.static_bp == 18624  # faithful-trace BP == published BP
+    assert p.static_bs == pt.AES_TOTALS["BS_trace_faithful"]
+    assert p.is_hybrid
+    assert p.total_cycles <= pt.AES_TOTALS["hybrid"]
+    assert pt.AES_TOTALS["hybrid"] - p.total_cycles < 145  # <= 1 transpose
+    # every SubBytes phase runs in BS, every MixColumns in BP
+    for ph, layout in zip(aes_trace(), p.schedule):
+        if ph.name.startswith("SB"):
+            assert layout == Layout.BS
+        if ph.name.startswith("MC"):
+            assert layout == Layout.BP
+
+
+def test_aes_transpose_sensitivity_10x():
+    """Sec. 5.4: 10x transpose core => ~2.6% runtime, 2.59x hybrid speedup.
+    (Our DP schedule has one fewer transpose, hence >= the published
+    speedup and <= the published increase.)"""
+    s = transpose_sensitivity(aes_trace(), core_cycles=10)
+    assert s["runtime_increase_pct"] < pt.AES_SENSITIVITY_10X[
+        "runtime_increase_pct"] + 0.2
+    assert s["hybrid_speedup"] >= pt.AES_SENSITIVITY_10X["hybrid_speedup"]
+
+
+def test_hybrid_profitability_threshold():
+    """Hybrid stays optimal for AES far beyond the paper's conservative
+    51-cycle reference threshold (Sec. 5.5)."""
+    thr = hybrid_profitability_threshold(aes_trace())
+    assert thr > pt.HYBRID_THRESHOLD_CYCLES
+
+
+# ------------------------------------------------------------------ Fig 8 --
+
+def test_fig8_vgg13_utilization():
+    for layer, ch, spatial in pt.FIG8_LAYERS:
+        ops = ch * spatial * spatial / 9  # 3x3 kernel reuse
+        for layout in (Layout.BP, Layout.BS):
+            quoted = pt.FIG8_QUOTED_UTIL.get((layer, layout.value))
+            if quoted is None:
+                continue
+            u = utilization(layout, int(ops), 16)
+            assert u == pytest.approx(quoted, abs=0.005), (layer, layout)
+
+
+# ---------------------------------------------------------------- Table 6 --
+
+def test_table6_all_apps_in_published_bands():
+    res = evaluate_all()
+    assert len(res) == 22  # paper: "22 full applications"
+    for name, r in res.items():
+        band = pt.TABLE6_BANDS[pt.TABLE6_APPS[name]]
+        if band.category == "Hybrid recommended":
+            assert r["is_hybrid"], name
+            assert r["hybrid_speedup"] > 1.05, name
+        else:
+            assert band.lo <= r["bs_over_bp"] <= band.hi, (
+                name, r["bs_over_bp"], band)
+
+
+def test_table6_aes_hybrid_headline():
+    r = evaluate_all()["aes"]
+    assert r["hybrid_speedup"] >= 2.66  # DP >= the published hand schedule
+
+
+def test_up_to_14x_between_static_layouts():
+    """Abstract claim: 'up to 14x variations between static layouts'."""
+    best = max(max(r["bs_over_bp"], 1 / r["bs_over_bp"])
+               for r in evaluate_all().values())
+    # the 14x shows at kernel level (MULTU compute); app level is bounded
+    assert cm.bs_mult(16) / cm.bp_mult(16) >= 14
+    assert best < 14  # batching keeps app-level spreads tighter

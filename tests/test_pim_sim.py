@@ -1,0 +1,220 @@
+"""Functional-simulator tests: bitline primitives, bit-serial arithmetic
+(property tests vs integer semantics), transpose unit, AES/Keccak/FIR."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.pim import bitserial as bs
+from repro.pim.array_sim import CSArray
+from repro.pim.transpose_sim import bp_to_bs, bs_to_bp, round_trip
+from repro.pim import aes, fir, keccak
+
+
+# --------------------------------------------------------- bitline array ---
+
+def test_multi_row_activation_truth_tables():
+    a = CSArray.zeros(rows=4, cols=4)
+    a = a.write_row(0, jnp.array([0, 0, 1, 1], bool))
+    a = a.write_row(1, jnp.array([0, 1, 0, 1], bool))
+    np.testing.assert_array_equal(np.asarray(a.activate_and(0, 1)),
+                                  [0, 0, 0, 1])
+    np.testing.assert_array_equal(np.asarray(a.activate_nor(0, 1)),
+                                  [1, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(a.activate_xor(0, 1)),
+                                  [0, 1, 1, 0])
+    np.testing.assert_array_equal(np.asarray(a.activate_or(0, 1)),
+                                  [0, 1, 1, 1])
+
+
+def test_op_into_writeback():
+    a = CSArray.zeros(rows=4, cols=2)
+    a = a.write_row(0, jnp.array([1, 0], bool))
+    a = a.write_row(1, jnp.array([1, 1], bool))
+    a = a.op_into("xor", 0, 1, dst=2)
+    np.testing.assert_array_equal(np.asarray(a.read_row(2)), [0, 1])
+    a = a.not_into(2, 3)
+    np.testing.assert_array_equal(np.asarray(a.read_row(3)), [1, 0])
+
+
+# ----------------------------------------------- bit-serial arithmetic -----
+
+W = 12
+MASK = (1 << W) - 1
+vals = st.lists(st.integers(0, MASK), min_size=1, max_size=16)
+
+
+@settings(max_examples=60, deadline=None)
+@given(vals, vals)
+def test_bs_add_matches_integers(xs, ys):
+    n = min(len(xs), len(ys))
+    x, y = np.array(xs[:n], np.uint32), np.array(ys[:n], np.uint32)
+    out = bs.unpack(bs.bs_add(bs.pack(jnp.asarray(x), W),
+                              bs.pack(jnp.asarray(y), W)))
+    np.testing.assert_array_equal(np.asarray(out), (x + y) & MASK)
+
+
+@settings(max_examples=60, deadline=None)
+@given(vals, vals)
+def test_bs_sub_matches_integers(xs, ys):
+    n = min(len(xs), len(ys))
+    x, y = np.array(xs[:n], np.uint32), np.array(ys[:n], np.uint32)
+    out = bs.unpack(bs.bs_sub(bs.pack(jnp.asarray(x), W),
+                              bs.pack(jnp.asarray(y), W)))
+    np.testing.assert_array_equal(np.asarray(out), (x - y) & MASK)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 255), min_size=1, max_size=8),
+       st.lists(st.integers(0, 255), min_size=1, max_size=8))
+def test_bs_mult_matches_integers(xs, ys):
+    n = min(len(xs), len(ys))
+    x, y = np.array(xs[:n], np.uint32), np.array(ys[:n], np.uint32)
+    out = bs.unpack(bs.bs_mult(bs.pack(jnp.asarray(x), 8),
+                               bs.pack(jnp.asarray(y), 8)))
+    np.testing.assert_array_equal(np.asarray(out), x * y)
+
+
+halfvals = st.lists(st.integers(0, (1 << (W - 1)) - 1), min_size=1,
+                    max_size=16)
+
+
+@settings(max_examples=40, deadline=None)
+@given(halfvals, halfvals)
+def test_bs_minmax(xs, ys):
+    """The sign-bit compare requires |a-b| < 2^(W-1) (no subtraction
+    overflow) -- the usual operating contract of the iterative-compare
+    variant; operands are drawn from the half-range."""
+    n = min(len(xs), len(ys))
+    x, y = np.array(xs[:n], np.uint32), np.array(ys[:n], np.uint32)
+    mn = bs.unpack(bs.bs_min(bs.pack(jnp.asarray(x), W),
+                             bs.pack(jnp.asarray(y), W)))
+    mx = bs.unpack(bs.bs_max(bs.pack(jnp.asarray(x), W),
+                             bs.pack(jnp.asarray(y), W)))
+    np.testing.assert_array_equal(np.asarray(mn), np.minimum(x, y))
+    np.testing.assert_array_equal(np.asarray(mx), np.maximum(x, y))
+
+
+@settings(max_examples=40, deadline=None)
+@given(vals)
+def test_bs_popcount(xs):
+    x = np.array(xs, np.uint32)
+    out = bs.unpack(bs.bs_popcount(bs.pack(jnp.asarray(x), W), out_width=5))
+    expect = np.array([bin(v).count("1") for v in x])
+    np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vals, vals, st.lists(st.booleans(), min_size=1, max_size=16))
+def test_bs_mux(xs, ys, cs):
+    n = min(len(xs), len(ys), len(cs))
+    x, y = np.array(xs[:n], np.uint32), np.array(ys[:n], np.uint32)
+    c = np.array(cs[:n], bool)
+    out = bs.unpack(bs.bs_mux(jnp.asarray(c), bs.pack(jnp.asarray(x), W),
+                              bs.pack(jnp.asarray(y), W)))
+    np.testing.assert_array_equal(np.asarray(out), np.where(c, x, y))
+
+
+def test_bs_shift_is_free_row_rename():
+    x = np.array([3, 5], np.uint32)
+    planes = bs.pack(jnp.asarray(x), 8)
+    shifted = bs.bs_shift_up(planes, 3)
+    np.testing.assert_array_equal(np.asarray(bs.unpack(shifted)), x << 3)
+
+
+# ------------------------------------------------------------- transpose ---
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 2**16 - 1), min_size=1, max_size=32))
+def test_transpose_round_trip(xs):
+    x = jnp.asarray(np.array(xs, np.uint32))
+    np.testing.assert_array_equal(np.asarray(round_trip(x, 16)),
+                                  np.array(xs, np.uint32))
+
+
+# ------------------------------------------------------------------- AES ---
+
+FIPS_KEY = np.array(bytearray.fromhex("000102030405060708090a0b0c0d0e0f"))
+FIPS_PT = np.array(bytearray.fromhex("00112233445566778899aabbccddeeff"))
+FIPS_CT = np.array(bytearray.fromhex("69c4e0d86a7b0430d8cdb78070b4c55a"))
+
+
+def test_aes_reference_fips197():
+    np.testing.assert_array_equal(aes.encrypt_reference(FIPS_PT, FIPS_KEY),
+                                  FIPS_CT)
+
+
+def test_aes_bp_layout_fips197():
+    np.testing.assert_array_equal(aes.encrypt_bp(FIPS_PT, FIPS_KEY), FIPS_CT)
+
+
+def test_aes_bs_layout_fips197():
+    """Bit-sliced GF-inversion SubBytes + physical-shuffle ShiftRows."""
+    np.testing.assert_array_equal(aes.encrypt_bs(FIPS_PT, FIPS_KEY), FIPS_CT)
+
+
+def test_aes_hybrid_layout_fips197():
+    """The paper's hybrid schedule encrypts identically."""
+    np.testing.assert_array_equal(aes.encrypt_hybrid(FIPS_PT, FIPS_KEY),
+                                  FIPS_CT)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.binary(min_size=16, max_size=16), st.binary(min_size=16, max_size=16))
+def test_aes_layouts_agree_random(pt_bytes, key_bytes):
+    pt = np.frombuffer(pt_bytes, np.uint8).copy()
+    key = np.frombuffer(key_bytes, np.uint8).copy()
+    ref = aes.encrypt_reference(pt, key)
+    np.testing.assert_array_equal(aes.encrypt_bp(pt, key), ref)
+    np.testing.assert_array_equal(aes.encrypt_bs(pt, key), ref)
+    np.testing.assert_array_equal(aes.encrypt_hybrid(pt, key), ref)
+
+
+def test_bs_gf_inverse_matches_table():
+    xs = np.arange(256, dtype=np.uint32)
+    planes = bs.pack(jnp.asarray(xs), 8)
+    inv = np.asarray(bs.unpack(aes.bs_gf_inverse(planes)))
+    for x in range(1, 256):
+        assert aes.gf_mul_int(int(x), int(inv[x])) == 1
+    assert inv[0] == 0  # x^254 of 0
+
+
+def test_bs_sub_bytes_matches_sbox_table():
+    xs = np.arange(256, dtype=np.uint32)
+    planes = bs.pack(jnp.asarray(xs), 8)
+    out = np.asarray(bs.unpack(aes.bs_sub_bytes(planes)))
+    np.testing.assert_array_equal(out, np.array(aes.sbox_table()))
+
+
+# ---------------------------------------------------------------- Keccak ---
+
+def test_keccak_pi_logical_equals_physical():
+    rng = np.random.default_rng(0)
+    state = jnp.asarray(rng.integers(0, 2**63, size=25, dtype=np.uint64))
+    np.testing.assert_array_equal(np.asarray(keccak.pi_logical(state)),
+                                  np.asarray(keccak.pi_physical(state)))
+
+
+def test_keccak_pi_is_permutation():
+    idx = keccak.pi_index_map()
+    assert sorted(idx.tolist()) == list(range(25))
+
+
+def test_keccak_theta_then_pi_runs():
+    rng = np.random.default_rng(1)
+    state = jnp.asarray(rng.integers(0, 2**63, size=25, dtype=np.uint64))
+    out = keccak.pi_logical(keccak.theta(state))
+    assert out.shape == (25,)
+    assert not np.array_equal(np.asarray(out), np.asarray(state))
+
+
+# ------------------------------------------------------------------- FIR ---
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(-100, 100), min_size=4, max_size=64),
+       st.lists(st.integers(-8, 8), min_size=4, max_size=4))
+def test_fir_matches_convolve(samples, coeffs):
+    s = np.array(samples, np.int64)
+    c = np.array(coeffs, np.int64)
+    out = np.asarray(fir.fir_bp(jnp.asarray(s), jnp.asarray(c)))
+    np.testing.assert_array_equal(out, fir.fir_reference(s, c))

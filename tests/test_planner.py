@@ -1,0 +1,137 @@
+"""Planner + taxonomy unit/property tests."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import Layout
+from repro.core.params import SystemParams
+from repro.core.planner import (
+    Phase, hybrid_profitability_threshold, plan,
+)
+from repro.core.taxonomy import (
+    CASE_STUDIES, Recommendation, WorkloadFeatures, classify,
+    paper_threshold_rule,
+)
+
+
+def _mkphases(costs):
+    return [Phase(f"p{i}", bp, bs) for i, (bp, bs) in enumerate(costs)]
+
+
+def test_static_bp_when_bp_dominates():
+    p = plan(_mkphases([(10, 100), (20, 200), (5, 50)]))
+    assert p.schedule == (Layout.BP,) * 3
+    assert p.total_cycles == 35
+    assert not p.is_hybrid
+
+
+def test_static_bs_when_bs_dominates():
+    p = plan(_mkphases([(100, 10), (200, 20)]))
+    assert p.schedule == (Layout.BS,) * 2
+    assert p.total_cycles == 30
+
+
+def test_hybrid_when_switch_pays():
+    # phase 2 saves 10_000 in BS; transpose costs 145 each way
+    p = plan(_mkphases([(10, 10_000), (10_000, 10), (10, 10_000)]))
+    assert p.is_hybrid
+    assert p.schedule == (Layout.BP, Layout.BS, Layout.BP)
+    assert p.total_cycles == 30 + 2 * 145
+
+
+def test_no_switch_when_transpose_too_expensive():
+    # saving of 100 < 2x145 transpose cost
+    p = plan(_mkphases([(10, 10_000), (110, 10), (10, 10_000)]))
+    assert not p.is_hybrid
+    assert p.schedule == (Layout.BP,) * 3
+
+
+def test_initial_layout_charged():
+    ph = _mkphases([(10, 10_000)])
+    p = plan(ph, initial_layout=Layout.BS)
+    # must transpose BS->BP first: 128 + 1 + 16
+    assert p.total_cycles == 10 + 145
+
+
+def test_profitability_threshold_monotone():
+    ph = _mkphases([(10, 2000), (2000, 10)])
+    thr = hybrid_profitability_threshold(ph)
+    assert thr > 0
+    sys_ok = SystemParams(transpose_core_cycles=thr)
+    sys_bad = SystemParams(transpose_core_cycles=thr + 1)
+    assert plan(ph, sys_ok).is_hybrid
+    assert not plan(ph, sys_bad).is_hybrid
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 10_000), st.integers(1, 10_000)),
+                min_size=1, max_size=12))
+def test_plan_never_worse_than_static(costs):
+    """Property: the DP schedule is <= both static choices."""
+    p = plan(_mkphases(costs))
+    assert p.total_cycles <= p.static_bp
+    assert p.total_cycles <= p.static_bs
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 10_000), st.integers(1, 10_000)),
+                min_size=1, max_size=10))
+def test_plan_matches_bruteforce(costs):
+    """Property: DP equals brute-force enumeration over all 2^n schedules."""
+    import itertools
+
+    phases = _mkphases(costs)
+    p = plan(phases)
+    best = None
+    for sched in itertools.product((Layout.BP, Layout.BS),
+                                   repeat=len(phases)):
+        total, prev = 0, None
+        for ph, l in zip(phases, sched):
+            if prev is not None and prev != l:
+                total += 145  # rows 16/128 default footprint
+            total += ph.cycles(l)
+            prev = l
+        best = total if best is None else min(best, total)
+    assert p.total_cycles == best
+
+
+# ------------------------------------------------------------- taxonomy ----
+
+def test_taxonomy_case_studies():
+    assert classify(CASE_STUDIES["aes"]).recommendation == Recommendation.HYBRID
+    assert classify(CASE_STUDIES["hdc"]).recommendation == Recommendation.BS
+    assert classify(CASE_STUDIES["fir"]).recommendation == Recommendation.BP
+    assert classify(
+        CASE_STUDIES["vgg_late_layer"]).recommendation == Recommendation.BP
+    assert classify(
+        CASE_STUDIES["edge_ai_int4"]).recommendation == Recommendation.BS
+    assert classify(
+        CASE_STUDIES["mixed_precision_dnn"]).recommendation == Recommendation.BP
+
+
+def test_taxonomy_reasons_cite_challenges():
+    v = classify(CASE_STUDIES["fir"])
+    assert any("Challenge 2" in r for r in v.reasons)
+
+
+def test_paper_threshold_rule():
+    """Sec. 5.5: 2% of the ~2550-cycle reference phase = 51 cycles."""
+    assert paper_threshold_rule(2550) == pytest.approx(51)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    precision=st.sampled_from([1, 4, 8, 16, 32]),
+    dop=st.integers(1, 1 << 22),
+    control=st.floats(0, 1),
+    bitfrac=st.floats(0, 1),
+)
+def test_taxonomy_total_order(precision, dop, control, bitfrac):
+    """classify() always returns a verdict with scores and reasons."""
+    f = WorkloadFeatures(
+        precision_bits=precision, dop=dop, control_intensity=control,
+        bit_level_fraction=bitfrac, working_set_bits=precision * 4)
+    v = classify(f)
+    assert v.recommendation in tuple(Recommendation)
+    assert v.bp_score >= 0 and v.bs_score >= 0
