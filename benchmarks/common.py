@@ -1,10 +1,20 @@
 """Shared benchmark helpers: timing + CSV row emission."""
 from __future__ import annotations
 
+import os
 import time
 
 
+def quick() -> bool:
+    """CI smoke mode (``--quick`` / REPRO_BENCH_QUICK=1): single timed
+    iteration per bench so entrypoints are exercised without the full
+    timing budget. Numbers are correctness-path only in this mode."""
+    return os.environ.get("REPRO_BENCH_QUICK", "") == "1"
+
+
 def time_us(fn, *args, repeat: int = 5, **kw) -> float:
+    if quick():
+        repeat = 1
     fn(*args, **kw)  # warmup
     t0 = time.perf_counter()
     for _ in range(repeat):

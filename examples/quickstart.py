@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import Layout, PAPER_SYSTEM
+from repro.core import Layout
 from repro.core.cost_model import vector_add_cost
 from repro.core.apps import aes_trace, aes_paper_accounting
 from repro.core.planner import plan

@@ -9,11 +9,8 @@ examples/layout_advisor.py and the EXPERIMENTS.md applicability table.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
-from repro.core.taxonomy import (
-    Recommendation, WorkloadFeatures, classify,
-)
+from repro.core.taxonomy import WorkloadFeatures, classify
 from repro.models.base import ArchConfig
 
 

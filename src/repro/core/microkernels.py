@@ -8,8 +8,7 @@ rows where the source's own components disagree.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Optional
+from typing import Callable
 
 from repro.core import cost_model as cm
 from repro.core.cost_model import CycleCost, Layout

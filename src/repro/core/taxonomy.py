@@ -18,9 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional, Sequence
 
-from repro.core.cost_model import Layout
 from repro.core.params import SystemParams, PAPER_SYSTEM
 
 

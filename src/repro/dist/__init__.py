@@ -1,0 +1,18 @@
+"""Distributed-execution subsystem: mesh-aware sharding resolution and
+HLO-level cost accounting (collective wire bytes, HBM boundary bytes,
+roofline composition).
+
+Modules
+-------
+sharding      symbolic PartitionSpec resolution (`resolve_pspec`), the
+              `use_mesh` trace-time mesh context, and the `shard` activation
+              constraint helper (a no-op off-mesh).
+hlo_analysis  `collect_collectives`: per-collective counts and wire-byte
+              estimates parsed from HLO text.
+hlo_bytes     `boundary_bytes`: HBM traffic (writes + distinct reads) with
+              fused-kernel scope exclusion.
+roofline      three-term (compute / memory / collective) per-chip roofline
+              records for the dry-run.
+"""
+from repro.dist import hlo_analysis, hlo_bytes, roofline, sharding  # noqa: F401
+from repro.dist.sharding import resolve_pspec, shard, use_mesh  # noqa: F401

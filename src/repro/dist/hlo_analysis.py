@@ -1,0 +1,112 @@
+"""Collective-communication accounting from HLO text.
+
+`collect_collectives` scans a (lowered or compiled) HLO module for
+collective ops and estimates per-op *wire bytes* -- the bytes a chip
+actually puts on the interconnect -- under the standard ring algorithms,
+with `n` the tensor payload in bytes and `g` the replica-group size:
+
+  all-reduce          2 * (g-1)/g * n   (reduce-scatter + all-gather ring)
+  all-gather              (g-1)/g * n
+  reduce-scatter          (g-1)/g * n
+  all-to-all              (g-1)/g * n
+  collective-permute              n     (every byte traverses one hop)
+
+Group size comes from ``replica_groups=[groups,size]<=[total]`` (iota
+form: the SECOND number is the per-group size) or from explicit
+``replica_groups={{0,1,...},...}`` lists; `default_group` covers modules
+whose collectives carry no group annotation (e.g. hand-written test HLO).
+
+Async pairs are deduplicated: ``*-start`` is counted, ``*-done`` is
+skipped, so an async collective contributes exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.dist.hlo_common import TENSOR_RE, tensor_bytes
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+#: wire-byte multiplier as a function of group size g
+_WIRE = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+# `%name = <shape> <op>(...)` where <op> is a collective, with an optional
+# -start/-done suffix (async pair halves).
+_INSTR_RE = re.compile(
+    r"=\s*(?P<shape>[^=]*?)\s*"
+    r"(?P<op>" + "|".join(COLLECTIVE_OPS) + r")(?P<suffix>-start|-done)?\(")
+
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,\s]+)\}")
+
+
+def _shape_bytes(shape_text: str, is_async: bool) -> int:
+    """Payload bytes of the instruction's result shape.
+
+    Non-tuple and variadic-tuple shapes sum their elements; async ``-start``
+    tuples alias the operand and result (plus scalar context), so the
+    largest single element is the payload.
+    """
+    parts = [tensor_bytes(m["dtype"], m["dims"])
+             for m in TENSOR_RE.finditer(shape_text)]
+    if not parts:
+        return 0
+    return max(parts) if is_async else sum(parts)
+
+
+def _group_size(line: str, default_group: Optional[int]) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip()])
+    return default_group or 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-collective aggregates over one HLO module."""
+
+    counts: dict        # op -> number of collectives
+    bytes_moved: dict   # op -> summed tensor payload bytes
+    wire_bytes: dict    # op -> summed ring-algorithm wire bytes
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+
+def collect_collectives(hlo_text: str,
+                        default_group: Optional[int] = None
+                        ) -> CollectiveStats:
+    """Parse `hlo_text` and aggregate collective counts and wire bytes."""
+    counts: dict = {}
+    moved: dict = {}
+    wire: dict = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if m["suffix"] == "-done":
+            continue  # counted at the paired -start
+        op = m["op"]
+        n = _shape_bytes(m["shape"], is_async=m["suffix"] == "-start")
+        g = _group_size(line, default_group)
+        counts[op] = counts.get(op, 0) + 1
+        moved[op] = moved.get(op, 0) + n
+        wire[op] = wire.get(op, 0.0) + _WIRE[op](max(g, 1)) * n
+    return CollectiveStats(counts=counts, bytes_moved=moved, wire_bytes=wire)

@@ -1,0 +1,141 @@
+"""HBM boundary-byte accounting from HLO text.
+
+`boundary_bytes` estimates the HBM traffic of a module as
+
+    sum(result bytes of every producing instruction)        -- writes
+  + sum(bytes of every DISTINCT operand value read)         -- reads
+
+Shape-only plumbing (`parameter`, `tuple`, `get-tuple-element`, `bitcast`,
+`constant`) produces no traffic of its own and is skipped on both sides;
+a parameter still costs a read the first time a real op consumes it.
+Instructions inside already-fused computations (``%fused_computation.*``)
+are internal to their fusion and skipped; the fusion instruction itself in
+the caller accounts for the kernel's boundary.
+
+Fused-kernel scope exclusion (``exclude_scope=``): ops whose
+``metadata={op_name=...}`` contains the scope string (e.g. the
+``flash_internal`` named_scope around the attention softmax state) are
+treated as one fused kernel whose intermediate values stay in VMEM.
+Because XLA drops metadata on some ops (dots, copies), the scope is closed
+*backward*: a producer ALL of whose consumers are in-scope joins the scope.
+What still counts toward HBM:
+
+  * writes by out-of-scope ops, plus in-scope values read by any
+    out-of-scope consumer (they *escape* the kernel);
+  * distinct reads by out-of-scope ops, plus kernel *inputs* (out-of-scope
+    values read by in-scope ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.dist.hlo_common import TENSOR_RE, tensor_bytes
+
+#: opcodes that never touch HBM themselves
+_FREE_OPS = frozenset(
+    {"parameter", "tuple", "get-tuple-element", "bitcast", "constant"})
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*(?P<shape>\(?[^)=]*?\)?)\s*"
+    r"(?P<op>[\w\-]+)\((?P<operands>[^)]*)\)(?P<rest>.*)$")
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_OP_NAME_RE = re.compile(r'metadata=\{[^}]*op_name="([^"]*)"')
+_COMPUTATION_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*"
+                             r"(?:\([^)]*\))?\s*(?:->\s*\S+\s*)?\{\s*$")
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    op: str
+    bytes: int
+    operands: tuple
+    op_name: str  # metadata op_name ("" when absent)
+    is_root: bool = False
+
+
+def _shape_bytes(shape_text: str) -> int:
+    return sum(tensor_bytes(m["dtype"], m["dims"])
+               for m in TENSOR_RE.finditer(shape_text))
+
+
+def _parse(hlo_text: str) -> list:
+    """Instructions of every non-fused computation in the module."""
+    instrs: list = []
+    in_fused = False
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "=" not in stripped:
+            cm = _COMPUTATION_RE.match(line)
+            in_fused = bool(cm) and cm.group(1).startswith("fused")
+            continue
+        if stripped == "}":
+            in_fused = False
+            continue
+        if in_fused:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        om = _OP_NAME_RE.search(m["rest"])
+        instrs.append(_Instr(
+            name=m["name"], op=m["op"],
+            bytes=_shape_bytes(m["shape"]),
+            operands=tuple(_OPERAND_RE.findall(m["operands"])),
+            op_name=om.group(1) if om else "",
+            is_root=stripped.startswith("ROOT ")))
+    return instrs
+
+
+def boundary_bytes(hlo_text: str,
+                   exclude_scope: Optional[str] = None) -> int:
+    """HBM boundary bytes of `hlo_text` (see module docstring)."""
+    instrs = _parse(hlo_text)
+    by_name = {i.name: i for i in instrs}
+    consumers: dict = {i.name: [] for i in instrs}
+    for i in instrs:
+        for o in i.operands:
+            if o in consumers:
+                consumers[o].append(i)
+
+    in_scope = set()
+    if exclude_scope:
+        in_scope = {i.name for i in instrs
+                    if i.op != "parameter" and exclude_scope in i.op_name}
+        # backward closure: a producer whose every consumer is in-scope is
+        # itself kernel-internal (XLA drops metadata on some ops)
+        changed = bool(in_scope)
+        while changed:
+            changed = False
+            for i in instrs:
+                if (i.name in in_scope or i.op in _FREE_OPS
+                        or not consumers[i.name]):
+                    continue
+                if all(c.name in in_scope for c in consumers[i.name]):
+                    in_scope.add(i.name)
+                    changed = True
+
+    writes = 0
+    reads: set = set()
+    for i in instrs:
+        if i.op in _FREE_OPS:
+            continue
+        if i.name not in in_scope:
+            writes += i.bytes
+            reads.update(o for o in i.operands
+                         if by_name.get(o) is not None
+                         and by_name[o].op not in {"tuple", "constant"})
+        else:
+            # in-scope: contributes only via escapes and kernel inputs
+            # (a ROOT is the module output -- it always escapes)
+            if i.is_root or any(c.name not in in_scope
+                                for c in consumers[i.name]):
+                writes += i.bytes  # escapes the fused kernel
+            reads.update(o for o in i.operands
+                         if o in by_name and o not in in_scope
+                         and by_name[o].op not in {"tuple", "constant"})
+
+    read_bytes = sum(by_name[o].bytes for o in reads)
+    return int(writes + read_bytes)

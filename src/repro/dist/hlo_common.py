@@ -1,0 +1,30 @@
+"""Shared HLO-text parsing primitives for the byte-accounting analyzers.
+
+One dtype-size table and tensor-shape regex, so `hlo_analysis` (wire
+bytes) and `hlo_bytes` (HBM boundary bytes) can never drift apart on
+what a tensor weighs.
+"""
+from __future__ import annotations
+
+import math
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+#: one tensor shape inside HLO text, e.g. ``f32[128,256]``
+TENSOR_RE = re.compile(r"(?P<dtype>[a-z]\w*)\[(?P<dims>[\d,]*)\]")
+
+
+def tensor_bytes(dtype: str, dims: str) -> int:
+    """Payload bytes of one ``dtype[dims]`` tensor (0 for token/opaque
+    pseudo-shapes, 1 element for scalars ``dtype[]``)."""
+    if dtype not in DTYPE_BYTES:
+        return 0
+    n = math.prod(int(d) for d in dims.split(",") if d) if dims else 1
+    return n * DTYPE_BYTES[dtype]

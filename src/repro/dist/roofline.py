@@ -1,0 +1,105 @@
+"""Three-term per-chip roofline for dry-run cells.
+
+Each compiled (arch x shape x mesh) cell reduces to three per-chip time
+terms under peak-rate assumptions:
+
+  compute_s     HLO FLOPs / peak matmul FLOP/s
+  memory_s      HBM boundary bytes / HBM bandwidth
+  collective_s  collective wire bytes / ICI bandwidth
+
+The step is bound by the largest term; MFU divides the *useful* model
+FLOPs (6ND analytic) by what the chip could have done in that time, and
+`useful_flops_fraction` is analytic-vs-HLO FLOPs (rematerialization and
+padding push it below 1).
+
+Peak numbers are a v5e-class accelerator chip; override via the module
+constants for other parts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+#: per-chip peak rates (v5e-class): bf16 matmul FLOP/s, HBM B/s, ICI B/s
+PEAK_FLOPS = 197e12
+HBM_BANDWIDTH = 819e9
+ICI_BANDWIDTH = 9e10
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    """One cell's roofline record (all *_per_chip inputs are per chip)."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_wire_bytes_per_chip: float
+    model_flops_total: float
+    collective_detail: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BANDWIDTH
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_wire_bytes_per_chip / ICI_BANDWIDTH
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def mfu(self) -> float:
+        if self.step_s <= 0:
+            return 0.0
+        useful = self.model_flops_total / max(self.chips, 1)
+        return useful / self.step_s / PEAK_FLOPS
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        if self.hlo_flops_per_chip <= 0:
+            return 0.0
+        return (self.model_flops_total / max(self.chips, 1)
+                / self.hlo_flops_per_chip)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "hlo_bytes_per_chip": self.hlo_bytes_per_chip,
+            "collective_wire_bytes_per_chip":
+                self.collective_wire_bytes_per_chip,
+            "model_flops_total": self.model_flops_total,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "step_s": self.step_s,
+            "bound": self.bound,
+            "mfu": self.mfu,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "collective_detail": self.collective_detail,
+        }
+
+
+def summarize(rl: Roofline) -> str:
+    return (f"[roofline] {rl.arch} x {rl.shape} on {rl.mesh} "
+            f"({rl.chips} chips): "
+            f"compute {rl.compute_s * 1e3:.2f} ms, "
+            f"memory {rl.memory_s * 1e3:.2f} ms, "
+            f"collective {rl.collective_s * 1e3:.2f} ms "
+            f"-> {rl.bound}-bound, mfu={rl.mfu:.3f}, "
+            f"useful_flops={rl.useful_flops_fraction:.3f}")

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs import ShapeSpec
 from repro.dist.sharding import resolve_pspec

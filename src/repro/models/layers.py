@@ -10,8 +10,6 @@ contract lives in repro/kernels/flash_attention.py).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 from typing import Optional
 

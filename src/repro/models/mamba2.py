@@ -16,11 +16,9 @@ which is why this family runs `long_500k`.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.dist.sharding import shard
 from repro import util

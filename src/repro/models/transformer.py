@@ -9,10 +9,6 @@ sub-layers (`block_layout`), so MoE-every-2 (llama4) and hybrid patterns
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

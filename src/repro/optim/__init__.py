@@ -1,0 +1,1 @@
+"""optim subpackage of the repro framework."""

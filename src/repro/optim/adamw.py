@@ -9,8 +9,6 @@ trick at scale.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

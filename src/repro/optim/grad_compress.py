@@ -11,22 +11,19 @@ the residual is returned as optimizer-side state.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def compressed_psum_leaf(g: jax.Array, err: jax.Array, axes):
     """(mean-reduced gradient, new error) with int8 wire payload."""
     y = g.astype(jnp.float32) + err
-    n = 1
-    for a in axes:
-        n *= lax.axis_size(a)
+    n = lax.psum(1, axes)  # reduction-group size (jax<0.5: no axis_size)
     m = lax.pmax(jnp.max(jnp.abs(y)), axes)
     scale = jnp.maximum(m, 1e-12) / 127.0
     q = jnp.clip(jnp.round(y / scale), -127, 127).astype(jnp.int8)

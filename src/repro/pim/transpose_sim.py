@@ -11,7 +11,6 @@ as the hybrid scheduler assumes.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.pim.bitserial import pack, unpack
 

@@ -1,0 +1,1 @@
+"""serve subpackage of the repro framework."""

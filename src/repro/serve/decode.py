@@ -10,12 +10,13 @@ already uses).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.sharding import place_on_mesh, use_mesh
 from repro.models import init_params, registry
 from repro.models.base import ArchConfig
 
@@ -25,16 +26,19 @@ class ServeSession:
     cfg: ArchConfig
     params: dict
     max_len: int
+    mesh: Optional[jax.sharding.Mesh] = None  # None => single-device
 
     def __post_init__(self):
         self.fns = registry.model_fns(self.cfg)
+        self.params = place_on_mesh(
+            self.params, self.fns.param_structure(self.cfg), self.mesh)
         self._decode = jax.jit(
             lambda p, c, t: self.fns.decode_step(self.cfg, p, c, t))
 
     def _empty_cache(self, batch: int):
-        return init_params(
-            self.fns.cache_structure(self.cfg, batch, self.max_len),
-            jax.random.key(0))
+        structure = self.fns.cache_structure(self.cfg, batch, self.max_len)
+        cache = init_params(structure, jax.random.key(0))
+        return place_on_mesh(cache, structure, self.mesh)
 
     def generate(self, prompts: Sequence[Sequence[int]],
                  max_new_tokens: int = 8) -> list[list[int]]:
@@ -44,15 +48,16 @@ class ServeSession:
         for i, p in enumerate(prompts):
             toks[i, plen - len(p):] = p  # left-pad
         cache = self._empty_cache(B)
-        logits, cache = self._decode(self.params, cache,
-                                     jnp.asarray(toks))  # prefill
         out = [list(p) for p in prompts]
-        cur = jnp.argmax(logits[:, -1:, : self.cfg.vocab_size], axis=-1
-                         ).astype(jnp.int32)
-        for _ in range(max_new_tokens):
-            for i in range(B):
-                out[i].append(int(cur[i, 0]))
-            logits, cache = self._decode(self.params, cache, cur)
+        with use_mesh(self.mesh):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(toks))  # prefill
             cur = jnp.argmax(logits[:, -1:, : self.cfg.vocab_size], axis=-1
                              ).astype(jnp.int32)
+            for _ in range(max_new_tokens):
+                for i in range(B):
+                    out[i].append(int(cur[i, 0]))
+                logits, cache = self._decode(self.params, cache, cur)
+                cur = jnp.argmax(logits[:, -1:, : self.cfg.vocab_size],
+                                 axis=-1).astype(jnp.int32)
         return out

@@ -16,13 +16,13 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, DataIterator
+from repro.dist.sharding import place_on_mesh, use_mesh
 from repro.models import init_params, registry
 from repro.models.base import ArchConfig
 from repro.optim import adamw
@@ -42,8 +42,9 @@ class LoopConfig:
 class Trainer:
     def __init__(self, cfg: ArchConfig, opt: adamw.AdamWConfig,
                  loop: LoopConfig, data: DataConfig, ckpt_dir: str,
-                 remat: bool = False):
+                 remat: bool = False, mesh=None):
         self.cfg, self.opt, self.loop, self.data = cfg, opt, loop, data
+        self.mesh = mesh  # None => single-device; shard() no-ops off-mesh
         self.ckpt = CheckpointManager(ckpt_dir)
         self.fns = registry.model_fns(cfg)
         self.step_fn = jax.jit(make_train_step(cfg, opt, remat=remat))
@@ -53,8 +54,9 @@ class Trainer:
 
     # ------------------------------------------------------------ state ----
     def init_state(self):
-        params = init_params(self.fns.param_structure(self.cfg),
-                             jax.random.key(self.loop.seed))
+        structure = self.fns.param_structure(self.cfg)
+        params = init_params(structure, jax.random.key(self.loop.seed))
+        params = place_on_mesh(params, structure, self.mesh)
         return params, adamw.init_state(params)
 
     def _restore_or_init(self):
@@ -81,25 +83,28 @@ class Trainer:
         params, opt_state, start = self._restore_or_init()
         it = DataIterator(self.data, start_step=start)
         last_loss = None
-        for step in range(start, self.loop.total_steps):
-            batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
-            t0 = time.perf_counter()
-            params, opt_state, metrics = self.step_fn(params, opt_state,
-                                                      batch)
-            last_loss = float(metrics["loss"])
-            self._watch(step, time.perf_counter() - t0)
-            if step % self.loop.log_every == 0:
-                self.metrics_log.append(
-                    {"step": step, "loss": last_loss,
-                     "grad_norm": float(metrics["grad_norm"]),
-                     "lr": float(metrics["lr"])})
-            done = step + 1
-            if done % self.loop.ckpt_every == 0 or \
-                    done == self.loop.total_steps:
-                self.ckpt.save(done, {"params": params, "opt": opt_state},
-                               metadata={"loss": last_loss,
-                                         "arch": self.cfg.name})
-            if preempt_after is not None and done >= preempt_after:
-                raise InterruptedError(f"preempted at step {done}")
+        with use_mesh(self.mesh):
+            for step in range(start, self.loop.total_steps):
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in next(it).items()}
+                t0 = time.perf_counter()
+                params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                          batch)
+                last_loss = float(metrics["loss"])
+                self._watch(step, time.perf_counter() - t0)
+                if step % self.loop.log_every == 0:
+                    self.metrics_log.append(
+                        {"step": step, "loss": last_loss,
+                         "grad_norm": float(metrics["grad_norm"]),
+                         "lr": float(metrics["lr"])})
+                done = step + 1
+                if done % self.loop.ckpt_every == 0 or \
+                        done == self.loop.total_steps:
+                    self.ckpt.save(done,
+                                   {"params": params, "opt": opt_state},
+                                   metadata={"loss": last_loss,
+                                             "arch": self.cfg.name})
+                if preempt_after is not None and done >= preempt_after:
+                    raise InterruptedError(f"preempted at step {done}")
         return {"final_step": self.loop.total_steps, "loss": last_loss,
                 "stragglers": self.stragglers, "metrics": self.metrics_log}

@@ -7,8 +7,6 @@ with optional gradient accumulation (microbatching) and remat.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

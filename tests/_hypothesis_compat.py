@@ -1,0 +1,91 @@
+"""Use `hypothesis` when installed; otherwise a deterministic fallback.
+
+These tests only need a modest strategy vocabulary (`sampled_from`,
+`integers`, `booleans`, `floats`, `lists`, `tuples`, `binary`). When
+hypothesis is available (CI installs it via the `test` extra) it is
+re-exported untouched; when it is missing (minimal containers) the
+fallback draws `settings(max_examples=...)` examples per test from a
+per-test seeded PRNG -- reproducible across runs, no external dependency,
+no shrinking.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # rng -> value
+
+    class st:  # noqa: N801 -- mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def sampled_from(values):
+            values = list(values)
+            return _Strategy(lambda rng: rng.choice(values))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.sample(rng) for _ in range(n)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rng: tuple(e.sample(rng) for e in elements))
+
+        @staticmethod
+        def binary(min_size=0, max_size=10):
+            def sample(rng):
+                n = rng.randint(min_size, max_size)
+                return bytes(rng.randrange(256) for _ in range(n))
+            return _Strategy(sample)
+
+    def settings(max_examples=None, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            # NOTE: no functools.wraps -- pytest would follow __wrapped__
+            # and mistake the strategy parameters for fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", None) \
+                    or _DEFAULT_EXAMPLES
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    args = [s.sample(rng) for s in arg_strats]
+                    kwargs = {k: s.sample(rng)
+                              for k, s in kw_strats.items()}
+                    fn(*args, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -1,0 +1,131 @@
+"""resolve_pspec / use_mesh / shard edge cases: absent axes, non-divisible
+dims, full replication, and the 3-axis (pod, data, model) production mesh.
+
+Multi-device meshes cannot be built on the host's single CPU device, so
+every check that needs one runs in a subprocess with
+``--xla_force_host_platform_device_count=512`` (the dry-run pattern, same
+as test_system.py); the in-process tests stick to size-1 meshes.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import current_mesh, resolve_pspec, shard, use_mesh
+
+
+# ------------------------------------------- in-process (1-device-safe) ----
+
+def test_axis_missing_from_mesh_replicates():
+    mesh = jax.make_mesh((1,), ("data",))
+    assert resolve_pspec((None, "model"), mesh, (4, 64)) == P(None, None)
+    # unknown symbolic name degrades the same way
+    assert resolve_pspec(("expert",), mesh, (64,)) == P(None)
+
+
+def test_fully_replicated_spec():
+    mesh = jax.make_mesh((1,), ("model",))
+    assert resolve_pspec((None, None, None), mesh,
+                         (4, 4, 4)) == P(None, None, None)
+
+
+def test_use_mesh_nests_and_restores():
+    assert current_mesh() is None
+    m1 = jax.make_mesh((1,), ("data",))
+    m2 = jax.make_mesh((1,), ("model",))
+    with use_mesh(m1):
+        assert current_mesh() is m1
+        with use_mesh(m2):
+            assert current_mesh() is m2
+        assert current_mesh() is m1
+    assert current_mesh() is None
+
+
+def test_use_mesh_restores_on_exception():
+    mesh = jax.make_mesh((1,), ("data",))
+    try:
+        with use_mesh(mesh):
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    assert current_mesh() is None
+
+
+def test_shard_noop_off_mesh():
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", None) is x
+
+
+def test_shard_constrains_on_mesh():
+    mesh = jax.make_mesh((1,), ("data",))
+    x = jnp.ones((4, 4))
+    with use_mesh(mesh):
+        y = jax.jit(lambda a: shard(a, "batch", None))(x)
+    assert (y == x).all()
+
+
+# ----------------------------- multi-device meshes (512-dev subprocess) ----
+
+_MESH_SCRIPT = textwrap.dedent("""\
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import json
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import resolve_pspec
+    from repro.launch.mesh import make_production_mesh
+
+    m24 = jax.make_mesh((2, 4), ("data", "model"))
+    prod = make_production_mesh(multi_pod=True)  # (pod=2, data=16, model=16)
+    checks = {
+        # --- (data=2, model=4) test mesh ---
+        # model axis has size 4; dim 6 is not divisible -> replicated
+        "nondiv_repl": resolve_pspec((None, "model"), m24, (8, 6))
+                       == P(None, None),
+        "div_kept": resolve_pspec((None, "model"), m24, (8, 8))
+                       == P(None, "model"),
+        # batch of 3 can't split over data=2 -> replicated
+        "batch_nondiv": resolve_pspec(("batch", None), m24, (3, 8))
+                       == P(None, None),
+        "batch_data": resolve_pspec(("batch", None), m24, (8, 16))
+                       == P("data", None),
+        # degradation is per-entry, not all-or-none
+        "mixed": resolve_pspec(("batch", "model"), m24, (5, 8))
+                       == P(None, "model"),
+        # --- 3-axis (pod, data, model) production mesh ---
+        # global batch shards over BOTH data-parallel axes
+        "batch_both": resolve_pspec(("batch", None), prod, (256, 64))
+                       == P(("pod", "data"), None),
+        # 16 divides data(16) but not pod*data(32): outer axis dropped
+        "batch_inner": resolve_pspec(("batch",), prod, (16,)) == P("data"),
+        "model": resolve_pspec((None, "model"), prod, (64, 64))
+                       == P(None, "model"),
+        # MoE weight layout: experts over data (EP), FF over model (TP)
+        "moe": resolve_pspec((None, "data", None, "model"), prod,
+                             (4, 16, 64, 64))
+                       == P(None, "data", None, "model"),
+        # batch of 1 (long_500k decode) fully replicates
+        "batch_one": resolve_pspec(("batch", None), prod, (1, 64))
+                       == P(None, None),
+    }
+    print(json.dumps(checks))
+""")
+
+
+def test_resolve_pspec_multi_device_meshes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=300)
+    assert out.returncode == 0, out.stderr[-3000:]
+    checks = json.loads(out.stdout.strip().splitlines()[-1])
+    assert all(checks.values()), checks

@@ -1,10 +1,8 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (hypothesis) in
 interpret mode."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.bitpack import bitpack

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
-from repro.models import abstract_params, init_params, registry
+from repro.models import init_params, registry
 from repro.models.base import init_params as init_p
 
 
@@ -82,8 +82,8 @@ def test_decode_matches_teacher_forcing(arch_id):
     cfg, fns, params = _setup(arch_id)
     if cfg.family in ("vlm", "audio"):
         pytest.skip("prefix models validated separately")
-    from repro.models import registry as R
-    mod = __import__(f"repro.models.{'mamba2' if cfg.family == 'ssm' else 'transformer'}",
+    mod_name = "mamba2" if cfg.family == "ssm" else "transformer"
+    mod = __import__(f"repro.models.{mod_name}",
                      fromlist=["forward_logits"])
     B, S = 1, 8
     tokens = jax.random.randint(jax.random.key(4), (B, S), 0, cfg.vocab_size)

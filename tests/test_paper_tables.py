@@ -1,16 +1,13 @@
 """Validation of the cycle model against every published table (Tables 2-7,
 Fig. 8, and the Sec. 5.4/5.5 headline claims)."""
-import dataclasses
 
 import pytest
 
 from repro.core import cost_model as cm
 from repro.core import paper_tables as pt
-from repro.core.apps import (
-    aes_paper_accounting, aes_trace, evaluate_all, APP_TRACES,
-)
+from repro.core.apps import aes_paper_accounting, aes_trace, evaluate_all
 from repro.core.cost_model import Layout, utilization, vector_add_cost
-from repro.core.microkernels import MICROKERNELS, table5_model_row
+from repro.core.microkernels import table5_model_row
 from repro.core.params import PAPER_SYSTEM, SINGLE_ARRAY
 from repro.core.planner import (
     hybrid_profitability_threshold, plan, transpose_sensitivity,

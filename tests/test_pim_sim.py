@@ -2,12 +2,11 @@
 (property tests vs integer semantics), transpose unit, AES/Keccak/FIR."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.pim import bitserial as bs
 from repro.pim.array_sim import CSArray
-from repro.pim.transpose_sim import bp_to_bs, bs_to_bp, round_trip
+from repro.pim.transpose_sim import round_trip
 from repro.pim import aes, fir, keccak
 
 

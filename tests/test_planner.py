@@ -1,8 +1,7 @@
 """Planner + taxonomy unit/property tests."""
-import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cost_model import Layout
 from repro.core.params import SystemParams

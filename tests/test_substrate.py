@@ -166,7 +166,7 @@ def test_serve_matches_teacher_forcing():
 
 def test_compressed_psum_single_axis():
     from repro.optim.grad_compress import (
-        compressed_psum, init_errors, make_compressed_dp_step,
+        init_errors, make_compressed_dp_step,
     )
 
     mesh = jax.make_mesh((1,), ("data",))

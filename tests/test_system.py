@@ -8,7 +8,6 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -24,7 +23,7 @@ def test_collect_collectives_known_program():
     ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
       %p0 = f32[128,256]{1,0} parameter(0)
       %ar = f32[128,256]{1,0} all-reduce(%p0), replica_groups=[16,16]<=[256]
-      %ag = f32[128,256]{1,0} all-gather(%ar), replica_groups=[32,8]<=[256], dimensions={1}
+      %ag = f32[128,256]{1,0} all-gather(%ar), replica_groups=[32,8]<=[256]
       ROOT %cp = f32[128,256]{1,0} collective-permute(%ag), source_target_pairs={{0,1}}
     }
     """)
