@@ -1,0 +1,97 @@
+"""Micro-op executor benchmarks (ISSUE 2 tentpole).
+
+Two benches:
+
+* `executor_throughput` -- jit/vmap batched execution of 16-bit Table-5
+  kernels across 8 simulated arrays (4096 elements) in one jitted call,
+  with a semantics check against the integer oracle.
+* `executed_vs_analytic` -- the full differential table (kernel x layout x
+  width): executed program cycles vs the analytic `cost_model` compute
+  formula.  The complete table is written to
+  ``bench-artifacts/executed_vs_analytic.csv`` (also in --quick mode; CI
+  uploads it as a build artifact); only rows with a nonzero delta are
+  echoed as CSV bench rows, each gated on the delta being the documented
+  one (DESIGN.md Sec. 8).
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.core.cost_model import Layout
+from repro.core.microkernels import MICROKERNELS
+from repro.pim import executor as ex
+from repro.pim import programs as pr
+from repro.pim.bitserial import unpack
+
+ARTIFACT_DIR = os.environ.get("REPRO_BENCH_ARTIFACT_DIR", "bench-artifacts")
+
+_WIDTHS = (8, 16, 32)
+
+
+def executor_throughput() -> list[str]:
+    """1024+ elements of a 16-bit kernel across >= 8 arrays, one jitted
+    call (the ISSUE-2 acceptance operating point)."""
+    rows = []
+    w, n_arrays, cols = 16, 8, 512          # 8 x 512 = 4096 elements
+    rng = np.random.default_rng(0)
+    for kernel, out_name in (("vector_add", "sum"), ("multu", "prod")):
+        prog = pr.build(kernel, Layout.BS, width=w)
+        a = rng.integers(0, 1 << w, (n_arrays, cols)).astype(np.uint64)
+        b = rng.integers(0, 1 << w, (n_arrays, cols)).astype(np.uint64)
+        cells = np.zeros((n_arrays, prog.rows, cols), bool)
+        for i in range(n_arrays):
+            c = ex.init_cells(prog, cols)
+            c = ex.set_input(c, prog, "a", a[i])
+            c = ex.set_input(c, prog, "b", b[i])
+            cells[i] = np.asarray(c)
+        cells = jnp.asarray(cells)
+        us = time_us(
+            lambda: np.asarray(ex.run_batched(prog, cells).cells), repeat=3)
+        state = ex.run_batched(prog, cells)
+        start, nr = prog.output_region(out_name)
+        got = np.stack([unpack(state.cells[i, start:start + nr])
+                        for i in range(n_arrays)])
+        want = (a + b) % (1 << w) if kernel == "vector_add" else a * b
+        ok = bool(np.array_equal(got, want))
+        elems = n_arrays * cols
+        rows.append(emit(
+            f"exec.batched.{kernel}.BS.w{w}", us,
+            f"arrays={n_arrays};elements={elems};cycles={prog.cycles};"
+            f"melems_per_s={elems / max(us, 1e-9):.2f};match={ok}"))
+    return rows
+
+
+def executed_vs_analytic() -> list[str]:
+    """Executed-vs-analytic mismatch table + CSV artifact."""
+    rows = []
+    csv = ["kernel,layout,width,executed,analytic,delta,expected_delta,note"]
+    for name in pr.EXECUTABLE_KERNELS:
+        for layout in (Layout.BP, Layout.BS):
+            for w in _WIDTHS:
+                n = 16 if name == "reduction" else None
+                d = MICROKERNELS[name].executed_vs_analytic(layout, w, n=n)
+                csv.append(
+                    f"{name},{layout.value},{w},{d['executed']},"
+                    f"{d['analytic']},{d['delta']},{d['expected_delta']},"
+                    f"\"{d['note']}\"")
+                if d["delta"] != 0 or d["delta"] != d["expected_delta"]:
+                    documented = (d["delta"] == d["expected_delta"]
+                                  and bool(d["note"]))
+                    rows.append(emit(
+                        f"exec.delta.{name}.{layout.value}.w{w}", 0.0,
+                        f"executed={d['executed']};analytic={d['analytic']};"
+                        f"delta={d['delta']};match={documented}"))
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, "executed_vs_analytic.csv")
+    with open(path, "w") as f:
+        f.write("\n".join(csv) + "\n")
+    rows.append(emit("exec.delta.artifact", 0.0,
+                     f"path={path};table_rows={len(csv) - 1}"))
+    return rows
+
+
+ALL = [executor_throughput, executed_vs_analytic]

@@ -1,9 +1,12 @@
-"""Benchmark driver: one function per paper table/figure + kernel and
-roofline benches. Prints ``name,us_per_call,derived`` CSV rows.
+"""Benchmark driver: one function per paper table/figure + kernel,
+executor, and roofline benches. Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--quick`` (or REPRO_BENCH_QUICK=1) is the CI smoke mode: one timed
-iteration per bench, no artifacts written -- it exists so the kernel and
-table entrypoints can't silently rot between full benchmark runs.
+iteration per bench -- it exists so the kernel and table entrypoints can't
+silently rot between full benchmark runs. The executed-vs-analytic table
+(benchmarks/executor_bench.py) is still written to
+``bench-artifacts/executed_vs_analytic.csv`` in quick mode; CI uploads it
+as a build artifact.
 """
 from __future__ import annotations
 
@@ -21,11 +24,14 @@ def main(argv=None) -> int:
         os.environ["REPRO_BENCH_QUICK"] = "1"
 
     # import AFTER the env knob so benches see the quick-mode setting
-    from benchmarks import kernels_bench, paper_tables_bench, roofline_bench
+    from benchmarks import (
+        executor_bench, kernels_bench, paper_tables_bench, roofline_bench,
+    )
 
     print("name,us_per_call,derived")
     total, matched = 0, 0
-    for mod in (paper_tables_bench, kernels_bench, roofline_bench):
+    for mod in (paper_tables_bench, kernels_bench, executor_bench,
+                roofline_bench):
         for fn in mod.ALL:
             for row in fn():
                 total += 1

@@ -21,6 +21,14 @@ Derived kernel formulas are calibrated against the published Tables 3/5; the
 few per-width constants that cannot be expressed by one closed form across
 both published widths (see DESIGN.md Sec. 8) are kept in explicit calibration
 dicts with a documented fallback.
+
+Every Table-5 kernel formula here has an *executable* counterpart: a
+micro-op program (`repro.pim.programs`) replayed with per-op Table-2 charges
+by `repro.pim.executor` on the simulated array.  `MicroKernel.
+executed_vs_analytic` differences the two, and tests/test_microcode.py fails
+if a formula drifts from what the primitives actually require (the
+validation contract is documented in src/repro/pim/README.md; the few
+documented per-width deltas live in DESIGN.md Sec. 8).
 """
 from __future__ import annotations
 

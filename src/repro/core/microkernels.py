@@ -40,6 +40,37 @@ class MicroKernel:
                      n: int = 1, sys: SystemParams = PAPER_SYSTEM) -> int:
         return self.cost_fn(layout, n, width, sys).compute
 
+    # -- executable counterpart (repro.pim.executor) -------------------------
+    def executed_cycles(self, layout: Layout, width: int = 16,
+                        n: int | None = None) -> int:
+        """Cycle count of this kernel's micro-op program on the simulated
+        array -- the executable counterpart of `compute_only`.  Raises
+        KeyError for kernels without a program (divu, bitweave*,
+        multu_const)."""
+        from repro.pim.programs import build
+
+        return build(self.name, layout, width=width, n=n).cycles
+
+    def executed_vs_analytic(self, layout: Layout, width: int = 16,
+                             n: int | None = None) -> dict:
+        """Differential record: executed program cycles vs the analytic
+        compute formula, plus the documented calibration delta (DESIGN.md
+        Sec. 8) the executor is expected to show at this width."""
+        from repro.pim.programs import analytic_compute, build
+
+        prog = build(self.name, layout, width=width, n=n)
+        analytic = analytic_compute(self.name, layout, width, n=n)
+        return {
+            "kernel": self.name,
+            "layout": Layout(layout).value,
+            "width": width,
+            "executed": prog.cycles,
+            "analytic": analytic,
+            "delta": prog.cycles - analytic,
+            "expected_delta": prog.expected_delta,
+            "note": prog.calibration_note,
+        }
+
 
 def _mk(layout: Layout, sys: SystemParams, *, n: int, width: int,
         in_bits: float, out_bits: float, bp: int, bs: int) -> CycleCost:

@@ -1,11 +1,20 @@
-"""Functional bitplane simulator of the computing-SRAM substrate.
+"""Functional simulator stack of the computing-SRAM substrate.
 
-Validates the *semantics* of both layouts (the cycle costs live in
-`repro.core`): multi-row activation logic, bit-serial arithmetic, the
-transpose unit, and the paper's case-study programs (AES, Keccak pi, FIR).
+Four layers (see README.md in this package): the bitline array
+(`array_sim`), bit-serial arithmetic on vertical bitplanes (`bitserial`),
+the micro-op ISA (`microcode`) with its Table-5 program suite (`programs`),
+and the cycle-counting executor (`executor`) that differentially validates
+`repro.core.cost_model`.  Case-study programs: AES, Keccak pi, FIR.
 """
 from repro.pim.array_sim import CSArray  # noqa: F401
 from repro.pim.bitserial import (  # noqa: F401
-    bs_add, bs_mult, bs_mux, bs_sub, pack, unpack,
+    bs_add, bs_mult, bs_mux, bs_sub, pack, unpack, unpack_signed,
+)
+from repro.pim.executor import (  # noqa: F401
+    ExecResult, execute, run_batched,
+)
+from repro.pim.microcode import Op, Program  # noqa: F401
+from repro.pim.programs import (  # noqa: F401
+    EXECUTABLE_KERNELS, analytic_compute, build,
 )
 from repro.pim.transpose_sim import bp_to_bs, bs_to_bp  # noqa: F401

@@ -6,7 +6,10 @@ AND of the activated rows; the complementary bitline reads their NOR; an
 extra gate yields XOR. All columns compute in parallel -- exactly the
 in-SRAM computing primitive the cost model charges one cycle for.
 
-This layer validates *semantics*; cycles live in `repro.core.cost_model`.
+This layer validates *semantics*; cycle charges live in
+`repro.core.cost_model`, and `repro.pim.executor` replays micro-op programs
+(`repro.pim.microcode`) over these primitives so the two can be compared
+differentially.
 """
 from __future__ import annotations
 
@@ -14,6 +17,53 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+
+# -- free-function primitives (shared by CSArray and the micro-op executor) --
+
+def activate(op: str, cells: jax.Array, r0: int, r1: int,
+             invert1: bool = False) -> jax.Array:
+    """Multi-row activation of rows `r0`, `r1` sensed through gate `op`.
+
+    `invert1` reads `r1` through the complementary bitline (a free operand
+    inversion in the hardware; used e.g. by two's-complement subtract and
+    AND-NOT predication).
+    """
+    a = cells[r0]
+    b = cells[r1]
+    if invert1:
+        b = jnp.logical_not(b)
+    if op == "and":
+        return jnp.logical_and(a, b)
+    if op == "or":
+        return jnp.logical_or(a, b)
+    if op == "nor":
+        return jnp.logical_not(jnp.logical_or(a, b))
+    if op == "xor":
+        return jnp.logical_xor(a, b)
+    raise ValueError(f"unknown row op {op!r}")
+
+
+def row_to_words(bits: jax.Array, width: int) -> jax.Array:
+    """One BP row (cols,) bool -> (cols // width,) uint32 word lanes.
+
+    Lanes are LSB-first within each `width`-bit slice; width <= 32 (wider
+    values span two rows, see the executor's `wmult` lo/hi convention).
+    """
+    n = bits.shape[0] // width
+    b = bits[: n * width].reshape(n, width).astype(jnp.uint32)
+    ks = jnp.arange(width, dtype=jnp.uint32)
+    return jnp.sum(b << ks[None, :], axis=1)
+
+
+def words_to_row(words: jax.Array, width: int, cols: int) -> jax.Array:
+    """(n,) uint32 word lanes -> one BP row (cols,) bool (zero-padded)."""
+    ks = jnp.arange(width, dtype=jnp.uint32)
+    bits = ((words[:, None] >> ks[None, :]) & 1).astype(bool).reshape(-1)
+    if bits.shape[0] < cols:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((cols - bits.shape[0],), bool)])
+    return bits[:cols]
 
 
 @dataclasses.dataclass
@@ -41,32 +91,40 @@ class CSArray:
     def read_row(self, r: int) -> jax.Array:
         return self.cells[r]
 
+    def write_rows(self, start: int, block: jax.Array) -> "CSArray":
+        """Write a (k, cols) block of rows starting at `start`."""
+        k = block.shape[0]
+        return CSArray(self.cells.at[start:start + k].set(
+            block.astype(bool)))
+
+    def read_rows(self, start: int, count: int) -> jax.Array:
+        return self.cells[start:start + count]
+
+    def const_row(self, r: int, value: bool) -> "CSArray":
+        """Peripheral row clear/set (charged to the load phase, not compute)."""
+        return CSArray(self.cells.at[r].set(
+            jnp.full((self.cols,), bool(value))))
+
     # -- multi-row activation primitives (Fig. 1) ----------------------------
     def activate_and(self, r0: int, r1: int) -> jax.Array:
         """BL sense: high only if every activated cell stores 1."""
-        return jnp.logical_and(self.cells[r0], self.cells[r1])
+        return activate("and", self.cells, r0, r1)
 
     def activate_nor(self, r0: int, r1: int) -> jax.Array:
         """Complementary bitline sense: high iff all activated cells store 0."""
-        return jnp.logical_not(jnp.logical_or(self.cells[r0], self.cells[r1]))
+        return activate("nor", self.cells, r0, r1)
 
     def activate_xor(self, r0: int, r1: int) -> jax.Array:
         """NOR(AND, NOR) of the two sensed values (Fig. 1b)."""
-        a = self.activate_and(r0, r1)
-        n = self.activate_nor(r0, r1)
-        return jnp.logical_not(jnp.logical_or(a, n))
+        return activate("xor", self.cells, r0, r1)
 
     def activate_or(self, r0: int, r1: int) -> jax.Array:
-        return jnp.logical_not(self.activate_nor(r0, r1))
+        return activate("or", self.cells, r0, r1)
 
     # -- fused op-and-writeback (one compute cycle in the cost model) --------
-    def op_into(self, op: str, r0: int, r1: int, dst: int) -> "CSArray":
-        res = {
-            "and": self.activate_and,
-            "or": self.activate_or,
-            "nor": self.activate_nor,
-            "xor": self.activate_xor,
-        }[op](r0, r1)
+    def op_into(self, op: str, r0: int, r1: int, dst: int,
+                invert1: bool = False) -> "CSArray":
+        res = activate(op, self.cells, r0, r1, invert1=invert1)
         return CSArray(self.cells.at[dst].set(res))
 
     def not_into(self, src: int, dst: int) -> "CSArray":

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def pack(values: jax.Array, width: int) -> jax.Array:
@@ -21,11 +22,31 @@ def pack(values: jax.Array, width: int) -> jax.Array:
     return ((values[None, :] >> ks[:, None]) & 1).astype(bool)
 
 
-def unpack(planes: jax.Array) -> jax.Array:
-    """Bitplanes (width, n) -> integers (n,) (unsigned)."""
+def unpack(planes: jax.Array) -> np.ndarray:
+    """Bitplanes (width, n) -> integers (n,) (unsigned, uint64).
+
+    Decoding is the peripheral *readout* path, so it accumulates on the host
+    in uint64: ``bs_mult`` products carry 2w planes, and shifting plane
+    k >= 32 inside a uint32 container silently drops the high half (the
+    width-32 regression in tests/test_pim_sim.py). jax's default x64-disabled
+    mode cannot represent uint64, hence numpy.
+    """
+    p = np.asarray(planes).astype(np.uint64)
+    ks = np.arange(p.shape[0], dtype=np.uint64)
+    return np.sum(p << ks[:, None], axis=0, dtype=np.uint64)
+
+
+def unpack_signed(planes: jax.Array) -> np.ndarray:
+    """Bitplanes (width, n) -> two's-complement integers (n,) (int64).
+
+    Plane width-1 is the sign plane. Supports width < 64 (the executor's
+    operand widths plus double-width products of <= 32-bit multiplies).
+    """
     width = planes.shape[0]
-    ks = jnp.arange(width, dtype=jnp.uint32)
-    return jnp.sum(planes.astype(jnp.uint32) << ks[:, None], axis=0)
+    if width >= 64:
+        raise ValueError(f"signed decode needs width < 64, got {width}")
+    u = unpack(planes).astype(np.int64)
+    return u - (((u >> (width - 1)) & 1) << width)
 
 
 def full_adder(a: jax.Array, b: jax.Array, c: jax.Array):
@@ -132,7 +153,6 @@ def bs_popcount(a: jax.Array, out_width: int | None = None) -> jax.Array:
     w, n = a.shape
     ow = out_width or max(1, w.bit_length())
     acc = jnp.zeros((ow, n), bool)
-    one_w = 1
     for k in range(w):
         bit = jnp.zeros((ow, n), bool).at[0].set(a[k])
         acc = bs_add(acc, bit)

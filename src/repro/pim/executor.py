@@ -1,0 +1,274 @@
+"""Cycle-counting micro-op executor for the CSA simulator.
+
+Runs `repro.pim.microcode.Program`s functionally over the same substrate the
+bitline/bitplane simulators model: BS plane ops replay the multi-row
+activation primitives of `repro.pim.array_sim`, BP word ops replay the
+word-level peripheral ALU over LSB-first word lanes of a row. Cycle charges
+come from the Table-2 contract baked into the ISA (`op_cycles`), so
+
+    executed semantics  <->  integer references      (functional oracle)
+    executed cycles     <->  `repro.core.cost_model`  (differential oracle)
+
+are both checked by tests/test_microcode.py.
+
+The per-op step functions are pure jnp, so a whole program lowers to one
+XLA computation: `run_batched` wraps the unrolled program in
+``jax.jit(jax.vmap(...))`` and executes a kernel across many simulated
+arrays (leading axis) in a single jitted call -- the throughput mode used by
+benchmarks/executor_bench.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.pim.array_sim import CSArray, activate, row_to_words, words_to_row
+from repro.pim.bitserial import full_adder, pack
+from repro.pim.microcode import Op, Program
+from repro.pim.transpose_sim import planes_to_row, row_to_planes
+from repro.core.cost_model import Layout
+
+
+class ExecState(NamedTuple):
+    """Machine state threaded through the ops (a single CSA's view)."""
+
+    cells: jax.Array  # (rows, cols) bool -- the cell core
+    carry: jax.Array  # (cols,) bool -- the BS peripheral carry latch
+    acc: jax.Array    # () uint32 -- the BS peripheral reduction accumulator
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecResult:
+    array: CSArray
+    carry: jax.Array
+    acc: jax.Array
+    cycles: int
+
+
+def _lane_mask(width: int) -> jnp.ndarray:
+    return jnp.uint32((1 << width) - 1)
+
+
+def _mult_lo_hi(a: jax.Array, b: jax.Array, width: int):
+    """(a * b) split into `width`-bit lo/hi halves, exact up to width 32.
+
+    Products of 32-bit lanes need 64 bits, which x64-disabled jax cannot
+    hold -- so the high half comes from the standard 16-bit-limb mulhi
+    (every intermediate below fits uint32 exactly).
+    """
+    m16 = jnp.uint32(0xFFFF)
+    a0, a1 = a & m16, a >> 16
+    b0, b1 = b & m16, b >> 16
+    t = a0 * b0
+    k = t >> 16
+    w0 = t & m16
+    t = a1 * b0 + k
+    w1, w2 = t & m16, t >> 16
+    t = a0 * b1 + w1
+    k = t >> 16
+    hi32 = a1 * b1 + w2 + k
+    lo32 = w0 | ((t & m16) << 16)
+    if width == 32:
+        return lo32, hi32
+    m = _lane_mask(width)
+    lo = lo32 & m
+    hi = ((lo32 >> width) | (hi32 << (32 - width))) & m
+    return lo, hi
+
+
+def _shift_lane(x: jax.Array, alu: str, k: int, width: int) -> jax.Array:
+    """k-bit shift within `width`-bit lanes (l / rl logical / ra arithmetic)."""
+    m = _lane_mask(width)
+    if k == 0:
+        return x
+    if alu == "l":
+        return (x << k) & m
+    if alu == "rl":
+        return x >> k
+    if alu == "ra":
+        sign = (x >> (width - 1)) & 1
+        fill = jnp.uint32(((1 << width) - 1) ^ ((1 << (width - k)) - 1))
+        return (x >> k) | jnp.where(sign.astype(bool), fill, jnp.uint32(0))
+    raise ValueError(f"unknown shift alu {alu!r}")
+
+
+def _apply_op(op: Op, st: ExecState, width: int) -> ExecState:
+    cells, carry, acc = st
+    cols = cells.shape[1]
+
+    # ----- BS plane ops -----------------------------------------------------
+    if op.kind == "row_op":
+        res = activate(op.alu, cells, op.src0, op.src1, invert1=op.invert1)
+        return st._replace(cells=cells.at[op.dst].set(res))
+    if op.kind == "not":
+        return st._replace(
+            cells=cells.at[op.dst].set(jnp.logical_not(cells[op.src0])))
+    if op.kind == "copy":
+        return st._replace(cells=cells.at[op.dst].set(cells[op.src0]))
+    if op.kind == "const":
+        return st._replace(cells=cells.at[op.dst].set(
+            jnp.full((cols,), bool(op.aux))))
+    if op.kind == "setc":
+        return st._replace(carry=jnp.full((cols,), bool(op.aux)))
+    if op.kind == "fa":
+        a = cells[op.src0]
+        b = cells[op.src1] if op.src1 is not None \
+            else jnp.zeros((cols,), bool)
+        if op.mask is not None:           # serial-multiplier AND gate
+            b = jnp.logical_and(b, cells[op.mask])
+        if op.invert1:                    # complementary bitline
+            b = jnp.logical_not(b)
+        s, cnew = full_adder(a, b, carry)
+        cells = cells.at[op.dst].set(s)
+        if op.cout is not None:           # carry-save writeback
+            cells = cells.at[op.cout].set(cnew)
+        return ExecState(cells, cnew, acc)
+    if op.kind == "mux":
+        c = cells[op.src0]
+        res = jnp.logical_or(jnp.logical_and(cells[op.src1], c),
+                             jnp.logical_and(cells[op.src2],
+                                             jnp.logical_not(c)))
+        return st._replace(cells=cells.at[op.dst].set(res))
+    if op.kind == "shift":
+        # renaming in hardware; the simulator moves the block (aux rows)
+        block = cells[op.src0:op.src0 + op.aux]
+        return st._replace(cells=cells.at[op.dst:op.dst + op.aux].set(block))
+    if op.kind == "col_reduce":
+        w = jnp.uint32(1) << jnp.uint32(op.aux)
+        return st._replace(
+            acc=acc + w * jnp.sum(cells[op.src0].astype(jnp.uint32)))
+
+    # ----- transposes -------------------------------------------------------
+    if op.kind == "t_bp2bs":
+        planes = row_to_planes(cells[op.src0], width)      # (width, lanes)
+        lanes = planes.shape[1]
+        return st._replace(
+            cells=cells.at[op.dst:op.dst + width, :lanes].set(planes))
+    if op.kind == "t_bs2bp":
+        lanes = cols // width
+        row = planes_to_row(cells[op.src0:op.src0 + width, :lanes], cols)
+        return st._replace(cells=cells.at[op.dst].set(row))
+
+    # ----- BP word ops ------------------------------------------------------
+    m = _lane_mask(width)
+
+    def words(r):
+        return row_to_words(cells[r], width)
+
+    def put(r, w):
+        return st._replace(cells=cells.at[r].set(
+            words_to_row(w & m, width, cols)))
+
+    if op.kind == "wadd":
+        return put(op.dst, words(op.src0) + words(op.src1))
+    if op.kind == "wsub":
+        return put(op.dst, words(op.src0) - words(op.src1))
+    if op.kind == "wmult":
+        lo, hi = _mult_lo_hi(words(op.src0), words(op.src1), width)
+        cells2 = cells.at[op.dst].set(words_to_row(lo, width, cols))
+        cells2 = cells2.at[op.aux].set(words_to_row(hi, width, cols))
+        return st._replace(cells=cells2)
+    if op.kind == "wlogic":
+        a, b = words(op.src0), words(op.src1)
+        if op.invert1:
+            b = ~b & m
+        res = {"and": a & b, "or": a | b, "xor": a ^ b}[op.alu]
+        return put(op.dst, res)
+    if op.kind == "wnot":
+        return put(op.dst, ~words(op.src0) & m)
+    if op.kind == "wcopy":
+        return put(op.dst, words(op.src0))
+    if op.kind == "wconst":
+        return put(op.dst, jnp.full((cols // width,), op.aux, jnp.uint32))
+    if op.kind == "wshift":
+        return put(op.dst, _shift_lane(words(op.src0), op.alu, op.aux, width))
+    if op.kind == "tree_stage":
+        w = words(op.src0)
+        half = op.aux
+        folded = w.at[:half].set(w[:half] + w[half:2 * half])
+        folded = folded.at[half:2 * half].set(0)
+        return put(op.src0, folded)
+
+    raise AssertionError(f"unhandled op kind {op.kind!r}")
+
+
+def make_runner(program: Program):
+    """Pure function cells -> ExecState unrolling `program` (jit-friendly)."""
+    ops, width = program.ops, program.width
+
+    def run(cells: jax.Array) -> ExecState:
+        cols = cells.shape[1]
+        st = ExecState(cells, jnp.zeros((cols,), bool), jnp.uint32(0))
+        for op in ops:
+            st = _apply_op(op, st, width)
+        return st
+
+    return run
+
+
+def execute(program: Program,
+            array: Union[CSArray, jax.Array]) -> ExecResult:
+    """Run `program` on one array eagerly; cycle count is static."""
+    cells = array.cells if isinstance(array, CSArray) else array
+    if cells.shape[0] < program.rows:
+        raise ValueError(
+            f"{program.name} needs {program.rows} rows, array has "
+            f"{cells.shape[0]}")
+    st = make_runner(program)(cells)
+    return ExecResult(CSArray(st.cells), st.carry, st.acc, program.cycles)
+
+
+_BATCHED_CACHE: dict = {}
+
+
+def run_batched(program: Program, cells: jax.Array) -> ExecState:
+    """Run `program` across many arrays -- cells (n_arrays, rows, cols) --
+    in ONE jitted call (`jit(vmap(run))`, compiled once per program).
+
+    Programs are frozen/hashable, so the cache keys on the full program
+    (including its ops), not just its name -- hand-built programs that
+    share a name never collide."""
+    fn = _BATCHED_CACHE.get(program)
+    if fn is None:
+        fn = jax.jit(jax.vmap(make_runner(program)))
+        _BATCHED_CACHE[program] = fn
+    return fn(cells)
+
+
+# --------------------------------------------------------------------------
+# Operand staging helpers (the load/readout phases of the cost model)
+# --------------------------------------------------------------------------
+
+def init_cells(program: Program, n: int, rows: Optional[int] = None,
+               cols: Optional[int] = None) -> jax.Array:
+    """Blank cell array sized for `program` over `n` elements.
+
+    BS: one element per column. BP: one element per `width`-bit lane.
+    """
+    if cols is None:
+        cols = n if program.layout is Layout.BS else n * program.width
+    return jnp.zeros((rows or program.rows, cols), bool)
+
+
+def set_input(cells: jax.Array, program: Program, name: str,
+              values) -> jax.Array:
+    """Stage an operand (unsigned integer view) into its program region."""
+    start, n_rows = program.input_region(name)
+    vals = jnp.asarray(values, jnp.uint32)
+    if program.layout is Layout.BS:
+        planes = pack(vals, n_rows)          # (n_rows, n)
+        return cells.at[start:start + n_rows, :planes.shape[1]].set(planes)
+    row = words_to_row(vals, program.width, cells.shape[1])
+    return cells.at[start].set(row)
+
+
+def get_output(state_cells: jax.Array, program: Program, name: str,
+               n: int) -> jax.Array:
+    """Read an output region back: BS -> (n_rows, n) planes, BP -> words."""
+    start, n_rows = program.output_region(name)
+    if program.layout is Layout.BS:
+        return state_cells[start:start + n_rows, :n]
+    return row_to_words(state_cells[start], program.width)[:n]

@@ -1,0 +1,180 @@
+"""Micro-op ISA for the computing-SRAM substrate (paper Table 2 contract).
+
+A :class:`Program` is a static sequence of :class:`Op`s addressing physical
+rows of one CSA. Two register files share the cell core:
+
+* **BS (plane) ops** treat each row as one bitplane of a vertical operand
+  (one element per column).  A multi-row activation plus writeback is one
+  cycle; the full-adder step (the BS peripheral's 1-bit serial adder) is one
+  cycle; shifts are row *renaming* and cost nothing; the synthesized MUX is
+  the 4-cycle AND/OR/NOT sequence of Table 2.
+* **BP (word) ops** treat each row as ``cols / width`` LSB-first word lanes
+  driven by the word-level peripheral ALU: logic/ADD are 1 cycle, SUB 2,
+  MULT ``width + 2``, and a k-bit shift costs k cycles.
+
+Cycle charges are *static* per op (no data dependence), so a program's cost
+is known at build time -- `Program.cycles` is the executable counterpart of
+the analytic `repro.core.cost_model` compute formulas, and
+`repro.pim.executor` replays the same ops functionally so semantics and
+cycles are validated together (see tests/test_microcode.py).
+
+Charging conventions (documented deviations live in DESIGN.md Sec. 8):
+
+* ``const`` / ``wconst`` rows are free: constant planes and mask words are
+  prepared by the periphery during the load phase, which the kernel cost
+  model charges separately (`CycleCost.load`).
+* ``setc`` (carry-latch preset) is free: the carry flip-flop lives in the
+  sense amplifier, not in a row.
+* ``fa`` may write its carry out to a row (`cout`) in the same cycle as the
+  sum: the serial multiplier's carry-save writeback drives the row pair
+  from the same activation.
+* ``fa`` takes an optional ``mask`` plane ANDed into the b operand for
+  free -- the AND gate in front of a serial-multiplier adder cell.
+* ``invert1`` on row ops and ``invert_b`` on ``fa`` read the second operand
+  through the complementary bitline (free hardware inversion).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.cost_model import BS_MUX1, Layout
+
+#: op kind -> cycle charge (None = computed per-op, see `op_cycles`)
+CYCLE_TABLE = {
+    # --- BS plane ops -------------------------------------------------------
+    "row_op": 1,     # multi-row activation + writeback (alu: and/or/nor/xor)
+    "not": 1,        # complementary-bitline read + writeback
+    "copy": 1,       # read + writeback
+    "const": 0,      # peripheral row clear/set (charged to load)
+    "setc": 0,       # carry-latch preset (aux = 0/1)
+    "fa": 1,         # 1-bit serial full adder (Table 2: add1 = 1)
+    "mux": BS_MUX1,  # synthesized per-plane MUX (Table 2: 4)
+    "shift": 0,      # shift-as-renaming (Table 2: shift = 0)
+    "col_reduce": 1,  # peripheral accumulator += 2^aux * popcount(row)
+    # --- transposes (on-chip transpose unit; rows_read + core + written) ----
+    "t_bp2bs": None,
+    "t_bs2bp": None,
+    # --- BP word ops --------------------------------------------------------
+    "wadd": 1,
+    "wsub": 2,
+    "wmult": None,   # width + 2 (Table 2)
+    "wlogic": 1,     # alu: and/or/xor (+ invert1 for the free complement)
+    "wnot": 1,
+    "wcopy": 1,
+    "wconst": 0,     # mask/constant word row (charged to load)
+    "wshift": None,  # k cycles for a k-bit shift (alu: l / rl / ra)
+    "tree_stage": None,  # reduction fold: 1 (adjacent pairs) or 2 (move+add)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One micro-op. Fields are interpreted per `kind` (see executor)."""
+
+    kind: str
+    dst: Optional[int] = None
+    src0: Optional[int] = None
+    src1: Optional[int] = None
+    src2: Optional[int] = None
+    aux: int = 0                # shift amount / const value / weight / length
+    alu: str = ""               # sub-op selector (row_op, wlogic, wshift)
+    invert1: bool = False       # complement the second operand (free)
+    mask: Optional[int] = None  # fa: AND-gate plane for the b operand
+    cout: Optional[int] = None  # fa: carry-out row (carry-save writeback)
+    cycles: Optional[int] = None  # explicit override (tree_stage)
+
+    def __post_init__(self):
+        if self.kind not in CYCLE_TABLE:
+            raise ValueError(f"unknown micro-op kind {self.kind!r}")
+
+
+def op_cycles(op: Op, width: int) -> int:
+    """Cycle charge of one op under the Table-2 contract."""
+    if op.cycles is not None:
+        return op.cycles
+    fixed = CYCLE_TABLE[op.kind]
+    if fixed is not None:
+        return fixed
+    if op.kind == "wmult":
+        return width + 2
+    if op.kind == "wshift":
+        return op.aux
+    if op.kind in ("t_bp2bs", "t_bs2bp"):
+        # read rows + 1 core cycle + write rows (repro.core.transpose)
+        return 1 + 1 + width
+    if op.kind == "tree_stage":
+        raise ValueError("tree_stage needs an explicit cycle override")
+    raise AssertionError(op.kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """A micro-op program plus its operand map and calibration annotation.
+
+    `inputs` / `outputs` map operand names to ``(start_row, n_rows)``
+    regions: BS operands span `width` plane rows (LSB first), BP operands
+    one word-lane row each. `expected_delta` records the *documented*
+    difference ``executed_cycles - analytic_compute`` for this width (0 for
+    an exact match); any nonzero delta carries a `calibration_note`
+    explaining it per DESIGN.md Sec. 8.
+    """
+
+    name: str
+    layout: Layout
+    width: int
+    ops: tuple
+    rows: int
+    inputs: tuple       # ((name, (start_row, n_rows)), ...)
+    outputs: tuple
+    n: Optional[int] = None       # element count baked in (BP reduction tree)
+    expected_delta: int = 0
+    calibration_note: str = ""
+
+    @property
+    def cycles(self) -> int:
+        """Executed cycle count (static: charges are data-independent)."""
+        return sum(op_cycles(op, self.width) for op in self.ops)
+
+    @property
+    def key(self):
+        """Stable cache key (builders are deterministic)."""
+        return (self.name, self.layout.value, self.width, self.n)
+
+    def input_region(self, name: str):
+        return dict(self.inputs)[name]
+
+    def output_region(self, name: str):
+        return dict(self.outputs)[name]
+
+    def validate(self) -> "Program":
+        """Static checks: row addresses in range (including multi-row
+        spans), ALU selectors known."""
+        for op in self.ops:
+            for r in (op.dst, op.src0, op.src1, op.src2, op.mask, op.cout):
+                if r is not None and not (0 <= r < self.rows):
+                    raise ValueError(
+                        f"{self.name}: op {op.kind} row {r} outside "
+                        f"0..{self.rows - 1}")
+            # multi-row spans: shift moves aux rows, transposes span width
+            spans = []
+            if op.kind == "shift":
+                spans = [(op.src0, op.aux), (op.dst, op.aux)]
+            elif op.kind == "t_bp2bs":
+                spans = [(op.dst, self.width)]
+            elif op.kind == "t_bs2bp":
+                spans = [(op.src0, self.width)]
+            for start, count in spans:
+                if start + count > self.rows:
+                    raise ValueError(
+                        f"{self.name}: op {op.kind} rows "
+                        f"{start}..{start + count - 1} exceed array rows "
+                        f"{self.rows}")
+            if op.kind == "row_op" and op.alu not in (
+                    "and", "or", "nor", "xor"):
+                raise ValueError(f"bad row_op alu {op.alu!r}")
+            if op.kind == "wlogic" and op.alu not in ("and", "or", "xor"):
+                raise ValueError(f"bad wlogic alu {op.alu!r}")
+            if op.kind == "wshift" and op.alu not in ("l", "rl", "ra"):
+                raise ValueError(f"bad wshift alu {op.alu!r}")
+        return self

@@ -11,6 +11,8 @@ as the hybrid scheduler assumes.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.pim.bitserial import pack, unpack
 
@@ -20,10 +22,37 @@ def bp_to_bs(words: jax.Array, width: int) -> jax.Array:
     return pack(words, width)
 
 
-def bs_to_bp(planes: jax.Array) -> jax.Array:
-    """(width, n) bitplanes -> (n,) unsigned words."""
+def bs_to_bp(planes: jax.Array) -> np.ndarray:
+    """(width, n) bitplanes -> (n,) unsigned words (host uint64 decode).
+
+    `unpack` accumulates on the host in uint64 (see its docstring), so this
+    is an eager readout path -- not jit-traceable.  Inside traced programs
+    use the bit-exact `planes_to_row` shuffle instead.
+    """
     return unpack(planes)
 
 
-def round_trip(words: jax.Array, width: int) -> jax.Array:
+def round_trip(words: jax.Array, width: int) -> np.ndarray:
     return bs_to_bp(bp_to_bs(words, width))
+
+
+# -- bit-exact physical transposes (the executor's TRANSPOSE micro-ops) ------
+
+def row_to_planes(row_bits: jax.Array, width: int) -> jax.Array:
+    """One BP row (cols,) bool -> (width, cols // width) bitplanes.
+
+    Pure wire-level shuffle: lane j's bit k moves to plane k, column j --
+    no integer decode, so it composes under `vmap`/`jit` inside the
+    micro-op executor.
+    """
+    n = row_bits.shape[0] // width
+    return row_bits[: n * width].reshape(n, width).T
+
+
+def planes_to_row(planes: jax.Array, cols: int) -> jax.Array:
+    """(width, n) bitplanes -> one BP row (cols,) bool (zero-padded)."""
+    bits = planes.T.reshape(-1)
+    if bits.shape[0] < cols:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((cols - bits.shape[0],), bool)])
+    return bits[:cols]

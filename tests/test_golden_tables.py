@@ -1,0 +1,26 @@
+"""Golden-snapshot gate for the cost-model tables (ISSUE 2 satellite).
+
+The snapshot text is *computed* from the cost formulas, so silent
+calibration drift in `repro.core.cost_model` / `repro.core.microkernels`
+fails tier-1 here instead of only the benchmark smoke.
+"""
+from pathlib import Path
+
+from repro.core.paper_tables import TABLE5, golden_snapshot
+
+GOLDEN = Path(__file__).parent / "golden" / "paper_tables.txt"
+
+
+def test_paper_tables_golden_snapshot():
+    assert GOLDEN.read_text() == golden_snapshot(), (
+        "cost-model output drifted from tests/golden/paper_tables.txt. "
+        "If the change is intentional, regenerate with: PYTHONPATH=src "
+        "python -m repro.core.paper_tables > tests/golden/paper_tables.txt")
+
+
+def test_golden_snapshot_covers_all_table5_rows():
+    text = GOLDEN.read_text()
+    t5 = text.split("[table5]")[1].split("[table7]")[0]
+    lines = [ln for ln in t5.strip().splitlines() if ln.strip()]
+    rows = lines[1:]  # drop the column-header remainder
+    assert len(rows) == len(TABLE5)

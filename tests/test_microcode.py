@@ -1,0 +1,307 @@
+"""Differential validation of the micro-op executor (tentpole suite).
+
+Two oracles per (kernel, layout, width):
+  1. semantics: executed program output == integer reference (numpy/python
+     ints, signed or unsigned per kernel contract);
+  2. cycles: executed cycle count == analytic `cost_model` compute formula,
+     up to the *documented* calibration delta carried by the program
+     (DESIGN.md Sec. 8) -- an undocumented mismatch fails.
+
+Plus ISA unit tests (Table-2 charges, transposes, shift-as-renaming) and
+the jit/vmap batched-execution contract.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.cost_model import Layout
+from repro.core.microkernels import MICROKERNELS
+from repro.pim import executor as ex
+from repro.pim import programs as pr
+from repro.pim.array_sim import CSArray
+from repro.pim.bitserial import unpack
+from repro.pim.microcode import Op, Program, op_cycles
+
+WIDTHS = (8, 16, 32)
+KERNELS = pr.EXECUTABLE_KERNELS
+LAYOUTS = (Layout.BP, Layout.BS)
+
+
+# ---------------------------------------------------------------- helpers --
+
+def _edge_vals(w):
+    return [0, 1, (1 << w) - 1, 1 << (w - 1), (1 << (w - 1)) - 1]
+
+
+def _inputs(name, w, rng):
+    """(inputs dict, n) with deliberate sign/overflow boundary values."""
+    m = 1 << w
+    if name in ("min", "max"):
+        # iterative-compare contract: |a-b| < 2^(w-1) => half-range operands
+        lo, hi = -(1 << (w - 2)), (1 << (w - 2))
+        a = np.r_[rng.integers(lo, hi, 8), [lo, hi - 1, 0, -1, 1]]
+        b = np.r_[rng.integers(lo, hi, 8), [hi - 1, lo, 0, 1, -1]]
+        return {"a": a % m, "b": b % m}, len(a)
+    if name == "if_then_else":
+        t = np.r_[rng.integers(0, m, 8), _edge_vals(w)].astype(np.uint64)
+        f = np.r_[rng.integers(0, m, 8), _edge_vals(w)[::-1]]
+        c = rng.integers(0, 2, len(t))
+        return {"cond": c, "t": t, "f": f % m}, len(t)
+    if name == "reduction":
+        # small values: the BS peripheral accumulator is uint32
+        a = rng.integers(0, min(m, 1 << 20), 16).astype(np.uint64)
+        return {"a": a}, 16
+    a = np.r_[rng.integers(0, m, 8), _edge_vals(w)].astype(np.uint64)
+    b = np.r_[rng.integers(0, m, 8), _edge_vals(w)[::-1]].astype(np.uint64)
+    b[-1] = a[-1]  # give `equal` at least one equal pair
+    if name in ("vector_add", "vector_sub", "multu", "equal"):
+        return {"a": a, "b": b}, len(a)
+    return {"a": a}, len(a)
+
+
+def _reference(name, w, inp):
+    """Unsigned-encoded expected outputs (python-int semantics, mod 2^w)."""
+    m = 1 << w
+    half = m >> 1
+
+    def signed(u):
+        return int(u) - m if int(u) >= half else int(u)
+
+    if name == "vector_add":
+        return (inp["a"] + inp["b"]) % m
+    if name == "vector_sub":
+        return (inp["a"].astype(np.int64) - inp["b"].astype(np.int64)) % m
+    if name == "multu":
+        return np.array([int(x) * int(y)
+                         for x, y in zip(inp["a"], inp["b"])], np.uint64)
+    if name in ("min", "max"):
+        fn = min if name == "min" else max
+        return np.array([fn(signed(x), signed(y)) % m
+                         for x, y in zip(inp["a"], inp["b"])], np.uint64)
+    if name == "abs":
+        return np.array([abs(signed(x)) % m for x in inp["a"]], np.uint64)
+    if name == "relu":
+        return np.array([x if signed(x) >= 0 else 0 for x in inp["a"]],
+                        np.uint64)
+    if name == "equal":
+        return (inp["a"] == inp["b"]).astype(np.uint64)
+    if name == "ge_0":
+        return np.array([1 if signed(x) >= 0 else 0 for x in inp["a"]],
+                        np.uint64)
+    if name == "gt_0":
+        return np.array([1 if signed(x) > 0 else 0 for x in inp["a"]],
+                        np.uint64)
+    if name == "if_then_else":
+        return np.where(inp["cond"] == 1, inp["t"], inp["f"]).astype(
+            np.uint64)
+    if name == "reduction":
+        return int(inp["a"].sum())
+    if name == "bitcount":
+        return np.array([bin(int(x)).count("1") for x in inp["a"]],
+                        np.uint64)
+    raise AssertionError(name)
+
+
+_OUT = {
+    "vector_add": "sum", "vector_sub": "diff", "multu": "prod",
+    "min": "min", "max": "max", "abs": "abs", "relu": "relu",
+    "equal": "eq", "ge_0": "ge0", "gt_0": "gt0", "if_then_else": "out",
+    "reduction": "sum", "bitcount": "count",
+}
+
+
+def _run(name, layout, w, inp, n):
+    prog = pr.build(name, layout, width=w,
+                    n=(n if (name == "reduction" and layout is Layout.BP)
+                       else None))
+    cells = ex.init_cells(prog, n)
+    for k, v in inp.items():
+        cells = ex.set_input(cells, prog, k, v)
+    return prog, ex.execute(prog, cells)
+
+
+def _decode(prog, res, name, n):
+    """Executed output in the unsigned reference encoding."""
+    if name == "reduction":
+        if prog.layout is Layout.BS:
+            return int(res.acc)
+        return int(np.asarray(
+            ex.get_output(res.array.cells, prog, "sum", 1))[0])
+    if name == "multu" and prog.layout is Layout.BP:
+        # lo/hi row pair -> full 2w-bit product
+        lo = np.asarray(ex.get_output(
+            res.array.cells, prog, "prod_lo", n)).astype(np.uint64)
+        hi = np.asarray(ex.get_output(
+            res.array.cells, prog, "prod_hi", n)).astype(np.uint64)
+        return lo | (hi << np.uint64(prog.width))
+    out = ex.get_output(res.array.cells, prog, _OUT[name], n)
+    if prog.layout is Layout.BS:
+        return unpack(out)
+    return np.asarray(out).astype(np.uint64)
+
+
+# ----------------------------------------------- executed semantics oracle --
+
+@pytest.mark.parametrize("width", WIDTHS)
+@pytest.mark.parametrize("layout", LAYOUTS, ids=lambda l: l.value)
+@pytest.mark.parametrize("name", KERNELS)
+def test_executed_matches_integer_reference(name, layout, width):
+    seed = zlib.crc32(f"{name}-{layout.value}-{width}".encode())
+    rng = np.random.default_rng(seed)
+    inp, n = _inputs(name, width, rng)
+    prog, res = _run(name, layout, width, inp, n)
+    got = _decode(prog, res, name, n)
+    want = _reference(name, width, inp)
+    if name == "multu" and layout is Layout.BS:
+        got = got[: n]
+    if name == "reduction":
+        if layout is Layout.BP:
+            want = want % (1 << width)  # word lanes wrap mod 2^w
+        assert got == want
+    else:
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# --------------------------------------------------- executed cycle oracle --
+
+@pytest.mark.parametrize("width", WIDTHS)
+@pytest.mark.parametrize("layout", LAYOUTS, ids=lambda l: l.value)
+@pytest.mark.parametrize("name", KERNELS)
+def test_executed_cycles_match_cost_model(name, layout, width):
+    """executed - analytic == documented delta; undocumented deltas fail."""
+    n = 16 if name == "reduction" else None
+    d = MICROKERNELS[name].executed_vs_analytic(layout, width, n=n)
+    assert d["delta"] == d["expected_delta"], d
+    if d["delta"] != 0:
+        assert d["note"], f"undocumented calibration delta: {d}"
+
+
+def test_table5_point_is_exact_except_documented():
+    """At the published 16-bit calibration point, only min/max (BP is
+    calibrated per-width in the source) and gt_0/BP (dual-issued combine)
+    carry deltas -- and those are annotated."""
+    annotated = {}
+    for name in KERNELS:
+        for layout in LAYOUTS:
+            n = 16 if name == "reduction" else None
+            d = MICROKERNELS[name].executed_vs_analytic(layout, 16, n=n)
+            if d["delta"]:
+                annotated[(name, layout.value)] = d["delta"]
+    assert annotated == {("gt_0", "BP"): 1}
+
+
+def test_executed_cycles_hook():
+    mk = MICROKERNELS["multu"]
+    assert mk.executed_cycles(Layout.BP, 16) == 18      # Table 2: w+2
+    assert mk.executed_cycles(Layout.BS, 16) == 256     # Table 3/5: w^2
+    assert mk.executed_cycles(Layout.BS, 32) == 1024
+    with pytest.raises(KeyError):
+        MICROKERNELS["divu"].executed_cycles(Layout.BP, 16)
+
+
+# ----------------------------------------------------------- ISA contract --
+
+def test_table2_op_charges():
+    w = 16
+    assert op_cycles(Op("fa", src0=0, dst=1), w) == 1
+    assert op_cycles(Op("row_op", alu="and", src0=0, src1=1, dst=2), w) == 1
+    assert op_cycles(Op("mux", src0=0, src1=1, src2=2, dst=3), w) == 4
+    assert op_cycles(Op("shift", src0=0, dst=1, aux=4), w) == 0
+    assert op_cycles(Op("const", dst=0), w) == 0
+    assert op_cycles(Op("setc", aux=1), w) == 0
+    assert op_cycles(Op("wadd", src0=0, src1=1, dst=2), w) == 1
+    assert op_cycles(Op("wsub", src0=0, src1=1, dst=2), w) == 2
+    assert op_cycles(Op("wmult", src0=0, src1=1, dst=2, aux=3), w) == 18
+    assert op_cycles(Op("wshift", alu="rl", aux=5, src0=0, dst=1), w) == 5
+
+
+def test_unknown_op_kind_rejected():
+    with pytest.raises(ValueError):
+        Op("bogus", dst=0)
+
+
+def test_program_validation_rejects_out_of_range_rows():
+    with pytest.raises(ValueError):
+        Program("bad", Layout.BS, 8,
+                (Op("copy", src0=0, dst=99),), rows=4,
+                inputs=(), outputs=()).validate()
+
+
+def test_bs_shift_is_free_renaming():
+    """A shifted operand costs 0 cycles and multiplies by 2^k."""
+    w, n, k = 8, 6, 3
+    rng = np.random.default_rng(3)
+    vals = rng.integers(0, 1 << (w - k), n).astype(np.uint64)
+    # zero-fill the k low planes (free consts), rename [0..w) to [8+k..)
+    ops = tuple([Op("const", dst=8 + j, aux=0) for j in range(k)]
+                + [Op("shift", src0=0, dst=8 + k, aux=w)])
+    prog = Program("shiftk", Layout.BS, w, ops, rows=8 + k + w,
+                   inputs=(("a", (0, w)),),
+                   outputs=(("shifted", (8, w + k)),)).validate()
+    assert prog.cycles == 0
+    cells = ex.init_cells(prog, n)
+    cells = ex.set_input(cells, prog, "a", vals)
+    res = ex.execute(prog, cells)
+    out = unpack(ex.get_output(res.array.cells, prog, "shifted", n))
+    np.testing.assert_array_equal(out, vals << k)
+
+
+def test_transpose_ops_round_trip():
+    """BP row -> BS planes -> BP row through the transpose unit micro-ops,
+    each charged rows_read + core + rows_written."""
+    w, n = 8, 4
+    vals = np.array([3, 250, 17, 128], np.uint64)
+    ops = (Op("t_bp2bs", src0=0, dst=2, aux=w),
+           Op("t_bs2bp", src0=2, dst=1, aux=w))
+    prog = Program("tr", Layout.BP, w, ops, rows=2 + w,
+                   inputs=(("a", (0, 1)),),
+                   outputs=(("back", (1, 1)), ("planes", (2, w)))).validate()
+    assert prog.cycles == 2 * (w + 2)
+    cells = ex.init_cells(prog, n)
+    cells = ex.set_input(cells, prog, "a", vals)
+    res = ex.execute(prog, cells)
+    planes = res.array.cells[2:2 + w, :n]
+    np.testing.assert_array_equal(unpack(planes), vals)
+    back = np.asarray(ex.get_output(res.array.cells, prog, "back", n))
+    np.testing.assert_array_equal(back.astype(np.uint64), vals)
+
+
+def test_execute_accepts_csarray_and_checks_rows():
+    prog = pr.build("vector_add", Layout.BS, width=8)
+    arr = CSArray.zeros(rows=prog.rows, cols=4)
+    arr = arr.write_rows(0, jnp.zeros((8, 4), bool))
+    res = ex.execute(prog, arr)
+    assert isinstance(res.array, CSArray)
+    assert res.cycles == 8
+    with pytest.raises(ValueError):
+        ex.execute(prog, CSArray.zeros(rows=4, cols=4))
+
+
+# ------------------------------------------------------- batched execution --
+
+def test_batched_jit_vmap_across_arrays():
+    """1024 elements of a 16-bit kernel across 8 simulated arrays execute
+    in ONE jitted call (the acceptance-criterion operating point)."""
+    w, n_arrays, cols = 16, 8, 128     # 8 * 128 = 1024 elements
+    prog = pr.build("vector_add", Layout.BS, width=w)
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, 1 << w, (n_arrays, cols)).astype(np.uint64)
+    b = rng.integers(0, 1 << w, (n_arrays, cols)).astype(np.uint64)
+    cells = np.zeros((n_arrays, prog.rows, cols), bool)
+    for i in range(n_arrays):
+        c = ex.init_cells(prog, cols)
+        c = ex.set_input(c, prog, "a", a[i])
+        c = ex.set_input(c, prog, "b", b[i])
+        cells[i] = np.asarray(c)
+    state = ex.run_batched(prog, jnp.asarray(cells))
+    start, nrows = prog.output_region("sum")
+    got = np.stack([unpack(state.cells[i, start:start + nrows])
+                    for i in range(n_arrays)])
+    np.testing.assert_array_equal(got, (a + b) % (1 << w))
+    # second call reuses the compiled executable (cache keys on the full
+    # hashable Program, so same-named hand-built programs never collide)
+    assert prog in ex._BATCHED_CACHE
+    ex.run_batched(prog, jnp.asarray(cells))

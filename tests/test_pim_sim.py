@@ -74,6 +74,79 @@ def test_bs_mult_matches_integers(xs, ys):
     np.testing.assert_array_equal(np.asarray(out), x * y)
 
 
+# --------------------------------------- unpack uint64 overflow (ISSUE 2) --
+
+def test_unpack_accumulates_in_uint64():
+    """Plane k >= 32 must not shift past a uint32 container."""
+    planes = jnp.zeros((40, 3), bool).at[35, 1].set(True).at[0, 2].set(True)
+    out = bs.unpack(planes)
+    assert out.dtype == np.uint64
+    np.testing.assert_array_equal(out, np.array([0, 1 << 35, 1], np.uint64))
+
+
+def test_bs_mult_width32_unpack_regression():
+    """bs_mult products carry 2w planes; at width 32 the top half lives in
+    planes 32..63 and needs the uint64 accumulation."""
+    x = np.array([0xFFFFFFFF, 0xDEADBEEF, 1 << 31, 3], np.uint64)
+    y = np.array([0xFFFFFFFB, 0x12345678, 1 << 31, 0xFFFFFFFF], np.uint64)
+    planes = bs.bs_mult(
+        bs.pack(jnp.asarray(x.astype(np.uint32)), 32),
+        bs.pack(jnp.asarray(y.astype(np.uint32)), 32))
+    assert planes.shape[0] == 64
+    np.testing.assert_array_equal(bs.unpack(planes), x * y)
+
+
+# ------------------------------- signed (two's-complement) bit-serial ------
+
+SW = 12
+SMOD = 1 << SW
+signed_vals = st.lists(
+    st.integers(-(SMOD >> 1), (SMOD >> 1) - 1), min_size=1, max_size=16)
+
+
+def _swrap(v, w):
+    """Two's-complement wraparound of python/numpy ints to w bits."""
+    m = 1 << w
+    return ((v + (m >> 1)) % m) - (m >> 1)
+
+
+def _pack_signed(x, w):
+    return bs.pack(jnp.asarray((x % (1 << w)).astype(np.uint32)), w)
+
+
+@settings(max_examples=60, deadline=None)
+@given(signed_vals)
+def test_bs_neg_signed(xs):
+    """bs_neg == numpy int negation incl. the INT_MIN wraparound."""
+    x = np.array(xs, np.int64)
+    out = bs.unpack_signed(bs.bs_neg(_pack_signed(x, SW)))
+    np.testing.assert_array_equal(out, _swrap(-x, SW))
+
+
+@settings(max_examples=60, deadline=None)
+@given(signed_vals, signed_vals)
+def test_bs_sub_signed(xs, ys):
+    n = min(len(xs), len(ys))
+    x, y = np.array(xs[:n], np.int64), np.array(ys[:n], np.int64)
+    out = bs.unpack_signed(bs.bs_sub(_pack_signed(x, SW),
+                                     _pack_signed(y, SW)))
+    np.testing.assert_array_equal(out, _swrap(x - y, SW))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(-128, 127), min_size=1, max_size=8),
+       st.lists(st.integers(-128, 127), min_size=1, max_size=8))
+def test_bs_mult_signed_low_planes(xs, ys):
+    """The low w planes of the unsigned shift-add product of two's-
+    complement encodings ARE the signed product mod 2^w (the full 2w-plane
+    product is unsigned-only -- signed use truncates)."""
+    n = min(len(xs), len(ys))
+    x, y = np.array(xs[:n], np.int64), np.array(ys[:n], np.int64)
+    planes = bs.bs_mult(_pack_signed(x, 8), _pack_signed(y, 8))
+    out = bs.unpack_signed(planes[:8])
+    np.testing.assert_array_equal(out, _swrap(x * y, 8))
+
+
 halfvals = st.lists(st.integers(0, (1 << (W - 1)) - 1), min_size=1,
                     max_size=16)
 

@@ -95,6 +95,39 @@ def test_plan_matches_bruteforce(costs):
     assert p.total_cycles == best
 
 
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(st.tuples(st.integers(1, 5_000), st.integers(1, 5_000),
+                       st.integers(1, 64), st.integers(1, 256)),
+             min_size=1, max_size=10),
+    st.sampled_from([None, Layout.BP, Layout.BS]),
+)
+def test_plan_matches_bruteforce_with_footprints(costs, init):
+    """Property (ISSUE 2): the DP returns the true optimum over all 2^k
+    layout schedules for random per-phase footprints, with transpose
+    switch costs derived independently from `transpose_cycles` (including
+    the initial-layout switch)."""
+    import itertools
+
+    from repro.core.transpose import transpose_cycles
+
+    phases = [Phase(f"p{i}", bp, bs, rbp, rbs)
+              for i, (bp, bs, rbp, rbs) in enumerate(costs)]
+    p = plan(phases, initial_layout=init)
+    best = None
+    for sched in itertools.product((Layout.BP, Layout.BS),
+                                   repeat=len(phases)):
+        total, prev = 0, init
+        for ph, l in zip(phases, sched):
+            if prev is not None and prev != l:
+                direction = "bp2bs" if l is Layout.BS else "bs2bp"
+                total += transpose_cycles(ph.rows_bp, ph.rows_bs, direction)
+            total += ph.cycles(l)
+            prev = l
+        best = total if best is None else min(best, total)
+    assert p.total_cycles == best
+
+
 # ------------------------------------------------------------- taxonomy ----
 
 def test_taxonomy_case_studies():
