@@ -10,9 +10,8 @@ import numpy as np
 from benchmarks.common import emit, time_us
 from repro.core import cost_model as cm
 from repro.core import paper_tables as pt
-from repro.core.apps import (
-    APP_TRACES, aes_paper_accounting, aes_trace, evaluate_app,
-)
+from repro.core.apps import aes_paper_accounting, evaluate_app
+from repro.workloads import get_workload, workload_names
 from repro.core.cost_model import Layout, utilization, vector_add_cost
 from repro.core.microkernels import table5_model_row
 from repro.core.planner import (
@@ -93,7 +92,7 @@ def t5_microkernels() -> list[str]:
 def t6_applications() -> list[str]:
     """Table 6: application classification (22 apps)."""
     rows = []
-    for app in APP_TRACES:
+    for app in workload_names("table6"):
         us = time_us(evaluate_app, app, repeat=1)
         r = evaluate_app(app)
         band = pt.TABLE6_BANDS[pt.TABLE6_APPS[app]]
@@ -119,15 +118,16 @@ def t7_aes() -> list[str]:
         rows.append(emit(f"t7.total_{k}", 0.0,
                          f"cycles={acc[k]};paper={pt.AES_TOTALS[k]};"
                          f"match={acc[k] == pt.AES_TOTALS[k]}"))
-    p = plan(aes_trace())
-    rows.append(emit("t7.dp_planner", time_us(plan, aes_trace(), repeat=3),
+    aes_phases = get_workload("aes").to_phases()
+    p = plan(aes_phases)
+    rows.append(emit("t7.dp_planner", time_us(plan, aes_phases, repeat=3),
                      f"cycles={p.total_cycles};speedup={p.hybrid_speedup:.2f};"
                      f"hand_schedule=6994;dp<=hand={p.total_cycles <= 6994}"))
-    s = transpose_sensitivity(aes_trace(), 10)
+    s = transpose_sensitivity(aes_phases, 10)
     rows.append(emit("t7.sensitivity_10x", 0.0,
                      f"runtime_pct=+{s['runtime_increase_pct']:.2f};"
                      f"speedup={s['hybrid_speedup']:.2f};paper=(+2.6,2.59)"))
-    thr = hybrid_profitability_threshold(aes_trace())
+    thr = hybrid_profitability_threshold(aes_phases)
     rows.append(emit("t7.hybrid_threshold", 0.0,
                      f"core_cycles={thr};paper_reference=51;"
                      f"hybrid_robust={thr > 51}"))

@@ -5,7 +5,8 @@ plus the paper's cycle accounting side by side (paper Sec. 5.4).
 """
 import numpy as np
 
-from repro.core.apps import aes_paper_accounting, aes_trace
+from repro.core.apps import aes_paper_accounting
+from repro.workloads import get_workload
 from repro.core.planner import plan
 from repro.pim import aes
 
@@ -23,7 +24,7 @@ def main():
         print(f"{name:34s}: {ct}  {'OK' if ct == want else 'MISMATCH'}")
 
     acc = aes_paper_accounting()
-    p = plan(aes_trace())
+    p = plan(get_workload("aes").to_phases())
     print(f"\ncycles: BP {acc['BP']} | BS {acc['BS']} | "
           f"hybrid(hand) {acc['hybrid']} | hybrid(DP) {p.total_cycles}")
     print(f"hybrid speedup over best static: {p.hybrid_speedup:.2f}x "

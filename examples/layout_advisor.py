@@ -1,12 +1,18 @@
 """Layout advisor over the 10 assigned architectures: the paper's
 workload-driven framework (Table 8) applied to quantized LM serving.
 
+The per-arch op traces live in the canonical workload IR
+(`repro.workloads.arch_workload`); the same workloads are addressable as
+`arch/<id>` from the CLI, e.g.
+
     PYTHONPATH=src python examples/layout_advisor.py [--bits 4]
+    PYTHONPATH=src python -m repro characterize arch/tinyllama_1_1b --ops
 """
 import argparse
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core.advisor import advise_arch
+from repro.workloads import arch_workload
 
 
 def main():
@@ -17,10 +23,14 @@ def main():
     print(f"layout verdicts at int{args.bits} weights "
           f"(BS = bitplane kernels, BP = word/MXU kernels):\n")
     for arch_id in ARCH_IDS:
-        r = advise_arch(get_config(arch_id), weight_bits=args.bits)
+        cfg = get_config(arch_id)
+        r = advise_arch(cfg, weight_bits=args.bits)
+        w = arch_workload(cfg, weight_bits=args.bits)
+        dims = {op.name: f"{op.m}x{op.k}x{op.n}@{op.width}b" for op in w.ops}
         print(f"{r['arch']:28s} overall={r['overall']}")
         for op in r["ops"]:
-            print(f"   {op['op']:14s} -> {op['recommendation']:6s} "
+            print(f"   {op['op']:14s} {dims[op['op']]:22s} -> "
+                  f"{op['recommendation']:6s} "
                   f"(bp {op['bp_score']:.1f} / bs {op['bs_score']:.1f})")
         print()
 

@@ -4,7 +4,8 @@
 """
 from repro.core import Layout
 from repro.core.cost_model import vector_add_cost
-from repro.core.apps import aes_trace, aes_paper_accounting
+from repro.core.apps import aes_paper_accounting
+from repro.workloads import get_workload
 from repro.core.planner import plan
 from repro.core.taxonomy import CASE_STUDIES, classify
 
@@ -18,7 +19,7 @@ def main():
         print(f"  n={n:7d}: BP {bp:6d} cy | BS {bs:6d} cy | BS/BP {bs/bp:.2f}")
 
     # 2. Hybrid scheduling (paper Sec. 5.4): AES-128
-    p = plan(aes_trace())
+    p = plan(get_workload("aes").to_phases())
     acc = aes_paper_accounting()
     print("\n== AES-128 ==")
     print(f"  static BP {p.static_bp} cy | static BS {p.static_bs} cy")

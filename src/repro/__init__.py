@@ -7,3 +7,15 @@ JAX training/serving framework. See DESIGN.md for the system inventory.
 """
 
 __version__ = "0.1.0"
+
+
+def characterize(workload, backends=("analytic", "planner"), **kw):
+    """One workload, many backends -> {backend: Report}.
+
+    Thin re-export of :func:`repro.workloads.characterize` (imported
+    lazily so `import repro` stays dependency-free).  See
+    ``python -m repro --help`` for the CLI equivalent.
+    """
+    from repro.workloads import characterize as _characterize
+
+    return _characterize(workload, backends=backends, **kw)

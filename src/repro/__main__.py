@@ -1,0 +1,168 @@
+"""``python -m repro``: the workload-IR command line.
+
+Subcommands:
+
+* ``list``          -- registered workloads (Table-5 / Table-6 / arch) and
+                       backends.
+* ``characterize``  -- run one or more workloads through one or more
+                       backends and print per-backend BP/BS/hybrid
+                       reports.  ``--quick`` is the CI smoke mode: every
+                       table5+table6 workload through the cycle backends,
+                       summaries written to
+                       ``bench-artifacts/characterize.json``.
+* ``tables``        -- the model-reproduced paper tables (the golden
+                       snapshot text; see tests/golden/paper_tables.txt).
+
+Examples::
+
+    python -m repro list
+    python -m repro characterize vgg --backends analytic,planner,executor
+    python -m repro characterize mk/multu aes --ops
+    python -m repro characterize --quick
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+def _artifact_dir() -> str:
+    return os.environ.get("REPRO_BENCH_ARTIFACT_DIR", "bench-artifacts")
+
+
+def _fmt_summary(summary: dict) -> str:
+    parts = []
+    for key, val in summary.items():
+        if isinstance(val, float):
+            parts.append(f"{key}={val:.3f}")
+        else:
+            parts.append(f"{key}={val}")
+    return " ".join(parts)
+
+
+def _print_report(report, show_ops: bool, max_ops: int = 24) -> None:
+    print(f"  [{report.backend}] {_fmt_summary(report.summary)}")
+    for note in report.notes:
+        print(f"    note: {note}")
+    if not show_ops:
+        return
+    shown = report.ops[:max_ops]
+    for op in shown:
+        if not op.supported:
+            print(f"    {op.op:20s} {op.kind:9s} unsupported: {op.note}")
+        elif op.bp_us is not None:
+            print(f"    {op.op:20s} {op.kind:9s} "
+                  f"bp={op.bp_us:9.1f}us bs={op.bs_us:9.1f}us  {op.note}")
+        else:
+            print(f"    {op.op:20s} {op.kind:9s} "
+                  f"bp={op.bp_cycles:>12d} bs={op.bs_cycles:>12d}  {op.note}")
+    if len(report.ops) > max_ops:
+        print(f"    ... ({len(report.ops) - max_ops} more ops; "
+              "use --json for the full report)")
+
+
+def cmd_list(args) -> int:
+    from repro.workloads import BACKENDS, list_workloads
+    from repro.workloads.registry import ALIASES
+
+    rows = list_workloads(args.source)
+    width = max(len(r["name"]) for r in rows) + 2
+    cur = None
+    for r in rows:
+        if r["source"] != cur:
+            cur = r["source"]
+            print(f"\n# source: {cur}")
+        print(f"{r['name']:{width}s}{r['description']}")
+    print("\n# aliases")
+    for alias, target in sorted(ALIASES.items()):
+        print(f"{alias:{width}s}-> {target}")
+    print("\n# backends")
+    print(", ".join(sorted(BACKENDS)))
+    return 0
+
+
+def cmd_characterize(args) -> int:
+    from repro.workloads import characterize, workload_names
+
+    spec = args.backends or ("analytic,planner,executor" if args.quick
+                             else "analytic,planner")
+    backends = [b.strip() for b in spec.split(",") if b.strip()]
+    names = list(args.workloads)
+    if args.quick and not names:
+        # CI smoke scope: the analytic registries (arch/ workloads need
+        # the jax model stack and are opt-in by name)
+        names = workload_names("table5") + workload_names("table6")
+    if not names:
+        print("error: no workloads given (or use --quick)", file=sys.stderr)
+        return 2
+    artifact: dict[str, dict] = {}
+    full: dict[str, dict] = {}
+    for name in names:
+        reports = characterize(name, backends=backends)
+        print(f"{name}:")
+        for rep in reports.values():
+            _print_report(rep, show_ops=args.ops)
+        artifact[name] = {b: rep.summary for b, rep in reports.items()}
+        if args.json:
+            full[name] = {b: dataclasses.asdict(rep)
+                          for b, rep in reports.items()}
+    if args.quick:
+        os.makedirs(_artifact_dir(), exist_ok=True)
+        path = os.path.join(_artifact_dir(), "characterize.json")
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=1, sort_keys=True)
+        print(f"\n# wrote per-workload per-backend summaries to {path}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(full, f, indent=1, sort_keys=True)
+        print(f"# wrote full reports to {args.json}")
+    return 0
+
+
+def cmd_tables(args) -> int:
+    del args
+    from repro.core.paper_tables import golden_snapshot
+
+    print(golden_snapshot(), end="")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro", description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_list = sub.add_parser("list", help="registered workloads and backends")
+    p_list.add_argument("--source", choices=("table5", "table6", "arch"),
+                        default=None)
+    p_list.set_defaults(fn=cmd_list)
+
+    p_char = sub.add_parser(
+        "characterize", help="run workloads through backends")
+    p_char.add_argument("workloads", nargs="*",
+                        help="registry names (e.g. vgg, mk/multu, "
+                             "arch/tinyllama_1_1b)")
+    p_char.add_argument("--backends", default=None,
+                        help="comma list: analytic,planner,executor,pallas "
+                             "(default analytic,planner; --quick adds "
+                             "executor)")
+    p_char.add_argument("--ops", action="store_true",
+                        help="print per-op rows, not just summaries")
+    p_char.add_argument("--quick", action="store_true",
+                        help="CI smoke: all table5+table6 workloads, "
+                             "summaries to bench-artifacts/characterize.json")
+    p_char.add_argument("--json", default=None, metavar="PATH",
+                        help="dump full reports (per-op rows) as JSON")
+    p_char.set_defaults(fn=cmd_characterize)
+
+    p_tab = sub.add_parser("tables", help="model-reproduced paper tables")
+    p_tab.set_defaults(fn=cmd_tables)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,21 +1,33 @@
 """Layout advisor over the assigned LM architectures.
 
-Extracts each architecture's per-layer operator trace (matmul dims,
-precision, control mix) from its ArchConfig and runs the paper's
-classification framework over it -- the Table-8 taxonomy applied to modern
-LM workloads (DESIGN.md §Arch-applicability). Used by
-examples/layout_advisor.py and the EXPERIMENTS.md applicability table.
+Runs the paper's classification framework (the Table-8 taxonomy) over
+each architecture's per-layer operator trace -- which now lives in the
+canonical workload IR (``repro.workloads.registry.arch_workload``); the
+advisor consumes IR :class:`repro.workloads.ir.Op`s and classifies their
+``features()`` lowering.  Used by examples/layout_advisor.py and the
+``python -m repro characterize arch/<id>`` CLI route.
+
+.. deprecated::
+    :func:`arch_op_trace` (the old bespoke ``OpTrace`` extraction) is a
+    shim over the IR route: it emits a :class:`DeprecationWarning` and
+    returns ``OpTrace`` rows converted from the IR ops -- values
+    identical to what it always returned (tests/test_workloads.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
-from repro.core.taxonomy import WorkloadFeatures, classify
+from repro.core.taxonomy import classify
 from repro.models.base import ArchConfig
+from repro.workloads.ir import Op
+from repro.workloads.registry import arch_workload
 
 
 @dataclasses.dataclass(frozen=True)
 class OpTrace:
+    """Deprecated pre-IR op record (kept for one release)."""
+
     name: str
     m: int  # output rows (tokens)
     k: int  # contraction
@@ -28,49 +40,30 @@ class OpTrace:
 
 def arch_op_trace(cfg: ArchConfig, *, tokens: int = 4096,
                   weight_bits: int = 4) -> list[OpTrace]:
-    """Representative per-layer ops for quantized serving at `weight_bits`."""
-    D = cfg.d_model
-    ops: list[OpTrace] = []
-    if cfg.family == "ssm":
-        Din = cfg.d_inner
-        ops.append(OpTrace("in_proj", tokens, D, 2 * Din + 2 * cfg.ssm_state
-                           + cfg.ssm_heads, weight_bits))
-        ops.append(OpTrace("ssd_scan", tokens, cfg.ssm_state,
-                           cfg.ssm_head_dim, 16, control_intensity=0.3))
-        ops.append(OpTrace("out_proj", tokens, Din, D, weight_bits))
-        return ops
-    if cfg.n_heads and cfg.n_kv_heads:
-        ops.append(OpTrace("qkv_proj", tokens, D, cfg.qkv_dim, weight_bits))
-        ops.append(OpTrace("attn_scores", tokens, cfg.head_dim, tokens, 16,
-                           control_intensity=0.25))  # softmax/masking
-        ops.append(OpTrace("o_proj", tokens, cfg.n_heads * cfg.head_dim, D,
-                           weight_bits))
-    if cfg.n_experts:
-        ops.append(OpTrace("router", tokens, D, cfg.n_experts, 16,
-                           control_intensity=0.6))  # top-k / dispatch
-        ops.append(OpTrace("expert_ffn", tokens * cfg.top_k, D, cfg.d_ff,
-                           weight_bits))
-    elif cfg.d_ff:
-        ops.append(OpTrace("ffn", tokens, D, cfg.d_ff, weight_bits))
-    if cfg.family == "hybrid":
-        W = cfg.lru_width
-        ops.append(OpTrace("rg_lru_gates", tokens, W, W, 16,
-                           control_intensity=0.4))
-    return ops
+    """Deprecated: use ``repro.workloads.arch_workload(cfg).ops``."""
+    warnings.warn(
+        "repro.core.advisor.arch_op_trace is deprecated; use "
+        "repro.workloads.arch_workload(cfg).ops (the canonical IR route)",
+        DeprecationWarning, stacklevel=2)
+    w = arch_workload(cfg, tokens=tokens, weight_bits=weight_bits)
+    return [OpTrace(name=op.name, m=op.m, k=op.k, n=op.n,
+                    weight_bits=op.width,
+                    control_intensity=op.control_intensity,
+                    mixed_precision=op.mixed_precision)
+            for op in w.ops]
 
 
-def advise_op(op: OpTrace) -> dict:
-    f = WorkloadFeatures(
-        precision_bits=op.weight_bits,
-        dop=op.m * op.n,
-        control_intensity=op.control_intensity,
-        bit_level_fraction=(1.0 if op.weight_bits <= 2 else
-                            0.7 if op.weight_bits <= 4 else
-                            op.bit_level_fraction),
-        working_set_bits=op.weight_bits * 8,
-        mixed_precision=op.mixed_precision,
-    )
-    v = classify(f)
+def advise_op(op) -> dict:
+    """Classify one op (IR :class:`Op` or legacy :class:`OpTrace`)."""
+    if isinstance(op, OpTrace):  # legacy record -> IR op (one release)
+        op = Op(name=op.name, kind="matmul", m=op.m, k=op.k, n=op.n,
+                width=op.weight_bits,
+                control_intensity=op.control_intensity,
+                bit_level_fraction=(op.bit_level_fraction
+                                    if op.weight_bits > 4 else None),
+                mixed_precision=op.mixed_precision,
+                working_set_bits=op.weight_bits * 8)
+    v = classify(op.features())
     return {"op": op.name, "recommendation": v.recommendation.value,
             "bp_score": v.bp_score, "bs_score": v.bs_score,
             "reasons": v.reasons}
@@ -78,7 +71,7 @@ def advise_op(op: OpTrace) -> dict:
 
 def advise_arch(cfg: ArchConfig, *, weight_bits: int = 4) -> dict:
     verdicts = [advise_op(op) for op in
-                arch_op_trace(cfg, weight_bits=weight_bits)]
+                arch_workload(cfg, weight_bits=weight_bits).ops]
     kinds = {v["recommendation"] for v in verdicts}
     overall = ("HYBRID" if len(kinds - {"HYBRID"}) > 1 or "HYBRID" in kinds
                else kinds.pop())

@@ -1,79 +1,53 @@
-"""Tier-2 application traces (paper Sec. 4.3.2 / Table 6).
+"""Tier-2 application evaluation (paper Sec. 4.3.2 / Table 6).
 
-Each application is a sequence of :class:`Phase`s built from the Table-2
-primitives and the micro-kernel cost model. The paper publishes the *bands*
-(BS/BP speedup classes) but not per-app input sizes; sizes below are chosen to
-be representative of the cited datasets (CIFAR/ImageNet for VGG, 1M points for
-K-means, ...) and are documented per app. The validation target is the
-published classification (Table 6), plus the exact AES totals (Table 7).
+.. deprecated::
+    The hand-built per-app ``*_trace()`` phase-list constructors that used
+    to live here moved to the canonical workload IR
+    (``repro.workloads.registry``); every constructor below is now a thin
+    shim that emits a :class:`DeprecationWarning` and returns the IR
+    route's lowering -- values are bit-for-bit identical (enforced by
+    tests/test_workloads.py and the tests/golden/paper_tables.txt
+    snapshot).  New call sites should use::
 
-Movement accounting follows the paper: iterative algorithms keep state
-resident (load once, compute many; Challenge 2), BS pays row-overflow spills
-when vertical footprints exceed 128 rows, and BS convolutions replicate
-window elements across columns (no horizontal shift reuse) while ES-BP reuses
-them via logical row addressing (Challenge 3).
+        from repro.workloads import get_workload, characterize
+        get_workload("vgg16").to_phases()      # planner phase list
+        characterize("vgg16", backends=("analytic", "planner"))
+
+``evaluate_app`` / ``evaluate_all`` remain the supported in-process API
+(they consume the IR internally), as do the AES accounting helpers used
+by ``paper_tables.golden_snapshot``.
 """
 from __future__ import annotations
 
-import math
+import warnings
 from typing import Callable
 
-from repro.core import cost_model as cm
-from repro.core.cost_model import Layout
-from repro.core.microkernels import MICROKERNELS
 from repro.core.params import SystemParams, PAPER_SYSTEM
 from repro.core.planner import Phase, Plan, plan
+from repro.workloads.registry import (  # noqa: F401  (AES_STAGE re-export)
+    AES_STAGE,
+    get_workload,
+    workload_names,
+)
 
 SYS = PAPER_SYSTEM
 
 
-def _xfer(bits: float) -> int:
-    return SYS.xfer_cycles(bits)
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.apps.{old} is deprecated; use {new} "
+        "(repro.workloads is the canonical workload registry)",
+        DeprecationWarning, stacklevel=3)
 
 
-def _bp_batches(n: int, w: int) -> int:
-    return SYS.bp_batches(n, w)
-
-
-def _bs_batches(n: int) -> int:
-    return SYS.bs_batches(n)
-
-
-def _phase(name, bp, bs, rows_bp=16, rows_bs=128) -> Phase:
-    return Phase(name, int(bp), int(bs), rows_bp, rows_bs)
-
-
-def _movement(name, bits) -> Phase:
-    """Layout-neutral data movement (row-serial bus)."""
-    c = _xfer(bits)
-    return _phase(name, c, c)
+def _trace(name: str) -> list[Phase]:
+    """The IR route the deprecated constructors now lower through."""
+    return get_workload(name).to_phases()
 
 
 # ---------------------------------------------------------------------------
-# AES-128 (paper Sec. 5.4, Table 7) -- the canonical hybrid case study
+# AES paper accounting (supported; consumed by paper_tables.golden_snapshot)
 # ---------------------------------------------------------------------------
-
-AES_STAGE = {  # per-round costs, 16-byte state (paper Table 7)
-    "add_round_key": (16, 128),
-    "sub_bytes": (1568, 115),
-    "shift_rows": (32, 256),
-    "mix_columns": (272, 2176),
-}
-# AES state: 16 rows in BP (1 byte/row) vs 128 rows in BS (1 bit/row)
-_AES_ROWS = dict(rows_bp=16, rows_bs=128)
-
-
-def aes_trace() -> list[Phase]:
-    """Faithful AES-128: initial ARK, 9 full rounds, final round w/o MixColumns."""
-    ph: list[Phase] = [_phase("ARK0", *AES_STAGE["add_round_key"], **_AES_ROWS)]
-    for r in range(1, 11):
-        ph.append(_phase(f"SB{r}", *AES_STAGE["sub_bytes"], **_AES_ROWS))
-        ph.append(_phase(f"SR{r}", *AES_STAGE["shift_rows"], **_AES_ROWS))
-        if r < 10:
-            ph.append(_phase(f"MC{r}", *AES_STAGE["mix_columns"], **_AES_ROWS))
-        ph.append(_phase(f"ARK{r}", *AES_STAGE["add_round_key"], **_AES_ROWS))
-    return ph
-
 
 def aes_paper_accounting() -> dict:
     """The published totals, using the paper's own per-case accounting
@@ -96,381 +70,51 @@ def aes_paper_accounting() -> dict:
 
 
 # ---------------------------------------------------------------------------
-# Strong-BP applications (band 1.5 - 3.0x)
+# Deprecated trace constructors (shims over the IR registry)
 # ---------------------------------------------------------------------------
 
-def brightness_trace() -> list[Phase]:
-    """Per-tile brightness with saturation: real-time, low-DoP tiles
-    (Challenge 1/6). 64 tiles x 1024 px, 16-bit; per tile: stream in,
-    offset (add), saturate (if-then-else), stream out."""
-    w, n, tiles = 16, 1024, 64
-    ph = []
-    for t in range(tiles):
-        ph.append(_movement(f"load{t}", n * w))
-        ph.append(_phase(f"offset{t}", cm.BP_ADD, cm.bs_add(w)))
-        ph.append(_phase(f"sat{t}", cm.if_then_else_bp(w), cm.if_then_else_bs(w)))
-        ph.append(_movement(f"store{t}", n * w))
-    return ph
-
-
-def kmeans_trace() -> list[Phase]:
-    """K-means (PIMBench 1M points processed in 48K-point resident tiles --
-    the per-tile BS/BP ratio is scale-invariant, so one tile is traced):
-    d=2, k=8, 10 iterations; distance = sub+mult+reduce, argmin = k-1
-    iterative min, per-iter centroid broadcast."""
-    w, k, iters = 16, 8, 10
-    n = 49152
-    ph = [_movement("load_points", n * w)]
-    bpb, bsb = _bp_batches(n, w), _bs_batches(n)
-    for i in range(iters):
-        ph.append(_movement(f"bcast_centroids{i}", k * 2 * w * 4096))
-        dist_bp = k * (cm.BP_SUB + cm.bp_mult(w) + cm.reduction_bp(2)) * bpb
-        dist_bs = k * (cm.bs_sub(w) + cm.bs_mult(w) + cm.reduction_bs(w)) * bsb
-        ph.append(_phase(f"dist{i}", dist_bp, dist_bs))
-        amin_bp = (k - 1) * cm.minmax_bp(w) * bpb
-        amin_bs = (k - 1) * cm.minmax_bs(w) * bsb
-        ph.append(_phase(f"argmin{i}", amin_bp, amin_bs))
-    ph.append(_movement("labels_out", n * 8))
-    return ph
-
-
-def keccak_trace() -> list[Phase]:
-    """Keccak-f[1600] (Challenge 3): 24 rounds. BP keeps 25 64-bit lanes in
-    ES-BP rows; pi is a zero-cost logical shuffle, rho costs word shifts.
-    BS is forced into EP-BS (1600 vertical rows overflow 128): logic costs
-    w cycles/op, shifts are free, but pi is a physical inter-column shuffle
-    and the state spills (row overflow) every round."""
-    w, rounds = 64, 24
-    lanes = 25
-    ph = [_movement("absorb", 1088 * 512)]  # rate x 512 parallel instances
-    spill_bits = (lanes * w - 128) * 512  # per-round BS working-set spill
-    for r in range(rounds):
-        theta_bp = 5 * 4 * cm.BP_LOGIC + 5 * (1 + cm.BP_LOGIC) + lanes
-        theta_bs = (5 * 4 + 5 + lanes) * 1  # row-wise ops, shifts free
-        ph.append(_phase(f"theta{r}", theta_bp, theta_bs,
-                         rows_bp=lanes, rows_bs=128))
-        rho_bp = 24 * (w // 2)  # avg rotation distance
-        rho_bs = 0
-        ph.append(_phase(f"rho{r}", rho_bp, rho_bs, rows_bp=lanes, rows_bs=128))
-        pi_bp = 0  # logical shuffle (address remap)
-        pi_bs = 2 * lanes * 2  # physical shuffle: read+write per lane (x2 pass)
-        ph.append(_phase(f"pi{r}", pi_bp, pi_bs, rows_bp=lanes, rows_bs=128))
-        chi_bp = lanes * 3 * cm.BP_LOGIC
-        chi_bs = lanes * 3
-        ph.append(_phase(f"chi{r}", chi_bp, chi_bs, rows_bp=lanes, rows_bs=128))
-        ph.append(_phase(f"spill{r}", 0, _xfer(spill_bits),
-                         rows_bp=lanes, rows_bs=128))
-    ph.append(_movement("squeeze", 256 * 512))
-    return ph
-
-
-def fir_trace() -> list[Phase]:
-    """4-tap FIR over 64k samples, 16-bit samples / 24-bit accumulators
-    (Challenge 2). The 11 live word-level variables need 11 rows in BP
-    (resident) but 265 vertical rows in BS -- a row overflow: the BS layout
-    parks the overflowed accumulator plane (24 rows) in a neighbour array
-    and evicts/reloads it once per tap phase."""
-    w, acc_w, taps, n = 16, 24, 4, 65536
-    live_words = 11
-    assert SYS.bs_row_overflow(live_words, acc_w)
-    spill_bits = acc_w * n  # one word-plane evict+reload per tap phase
-    ph = [_movement("coeffs", taps * w * 512)]
-    for t in range(taps):
-        ph.append(_movement(f"tap{t}.in", n * w))
-        mac_bp = cm.bp_mult(w) * _bp_batches(n, w)
-        mac_bs = cm.bs_mult(w) * _bs_batches(n)
-        ph.append(_phase(f"tap{t}.mac", mac_bp, mac_bs, rows_bp=11, rows_bs=128))
-        ph.append(_phase(f"tap{t}.spill", 0, _xfer(spill_bits),
-                         rows_bp=11, rows_bs=128))
-    for t in range(taps - 1):
-        add_bp = cm.BP_ADD * _bp_batches(n, w)
-        add_bs = cm.bs_add(acc_w) * _bs_batches(n)
-        ph.append(_phase(f"acc{t}", add_bp, add_bs, rows_bp=11, rows_bs=128))
-    ph.append(_movement("out", n * acc_w))
-    return ph
-
-
-# ---------------------------------------------------------------------------
-# Moderate-BP applications (band 1.2 - 1.5x)
-# ---------------------------------------------------------------------------
-
-def _conv_layer(name: str, n_out: int, k_elems: int = 9, w: int = 16,
-                in_elems: int | None = None) -> list[Phase]:
-    """One conv layer: n_out outputs, k_elems MACs each. ES-BP reuses window
-    elements via logical row addressing (1x load); EP-BS reuses the vertical
-    kernel extent via free row shifts but replicates across columns for the
-    horizontal extent (effective 2x load; Challenge 3)."""
-    in_e = n_out if in_elems is None else in_elems
-    repl = 2.0
-    load_bp = _xfer(in_e * w + k_elems * w * 512)
-    load_bs = _xfer(in_e * w * repl + k_elems * w * 512)
-    comp_bp = (k_elems * cm.bp_mult(w) + (k_elems - 1) * cm.BP_ADD) \
-        * _bp_batches(n_out, w)
-    comp_bs = (k_elems * cm.bs_mult(w) + (k_elems - 1) * cm.bs_add(2 * w)) \
-        * _bs_batches(n_out)
-    out = _xfer(n_out * 2 * w)
-    return [
-        _phase(f"{name}.load", load_bp, load_bs),
-        _phase(f"{name}.mac", comp_bp, comp_bs),
-        _phase(f"{name}.out", out, out),
-    ]
-
-
-_VGG_BLOCKS = {  # (channels, spatial, convs) per block, CIFAR-10 input
-    # (the paper's Tier-2 setup: "CIFAR-10 for VGG-16", Sec. 5.2)
-    "vgg13": [(64, 32, 2), (128, 16, 2), (256, 8, 2), (512, 4, 2), (512, 2, 2)],
-    "vgg16": [(64, 32, 2), (128, 16, 2), (256, 8, 3), (512, 4, 3), (512, 2, 3)],
-    "vgg19": [(64, 32, 2), (128, 16, 2), (256, 8, 4), (512, 4, 4), (512, 2, 4)],
-}
-_VGG_BATCH = 128  # batch inference
+def aes_trace() -> list[Phase]:
+    _deprecated("aes_trace()", 'get_workload("aes").to_phases()')
+    return _trace("aes")
 
 
 def vgg_trace(which: str = "vgg13") -> list[Phase]:
-    ph: list[Phase] = []
-    for bi, (c, s, reps) in enumerate(_VGG_BLOCKS[which]):
-        n_out = c * s * s * _VGG_BATCH
-        for r in range(reps):
-            ph += _conv_layer(f"b{bi}c{r}", n_out)
-    # CIFAR classifier: FC 512->512->10
-    for fi, (m, n) in enumerate([(512, 512), (512, 512), (512, 10)]):
-        ph += _gemv_phases(f"fc{fi}", m, n)
-    return ph
+    _deprecated("vgg_trace()", f'get_workload("{which}").to_phases()')
+    return _trace(which)
 
 
-def _gemv_phases(name: str, m: int, n: int, w: int = 16,
-                 chunk: int = 64) -> list[Phase]:
-    """y[n] = W[n,m] x[m]: n dot-products of length m, tree-split into
-    `chunk`-way partial sums. DoP = n*chunk -- usually far below the 262,144
-    1-bit PEs, so BS columns idle (Challenge 1)."""
-    chunk = min(chunk, m)
-    dop = n * chunk
-    load = _xfer(n * m * w + m * w)
-    macs_bp = (m // chunk) * (cm.bp_mult(w) + cm.BP_ADD) * _bp_batches(dop, w) \
-        + cm.reduction_bp(chunk) * _bp_batches(n, w)
-    macs_bs = (m // chunk) * (cm.bs_mult(w) + cm.bs_add(2 * w)) * _bs_batches(dop) \
-        + cm.reduction_bs(2 * w) * _bs_batches(n)
-    out = _xfer(n * 2 * w)
-    return [_phase(f"{name}.load", load, load),
-            _phase(f"{name}.mac", macs_bp, macs_bs),
-            _phase(f"{name}.out", out, out)]
+def _shim(name: str) -> Callable[[], list[Phase]]:
+    def fn() -> list[Phase]:
+        _deprecated(f"{name}_trace()", f'get_workload("{name}").to_phases()')
+        return _trace(name)
+    fn.__name__ = f"{name}_trace"
+    fn.__qualname__ = fn.__name__
+    fn.__doc__ = (f"Deprecated shim for the {name!r} workload; see "
+                  "repro.workloads.registry.")
+    return fn
 
 
-def gemm_trace() -> list[Phase]:
-    """C = A B at 400x400, 16-bit, output-stationary: the 160k outputs fill
-    only 61% of the BS columns while BP batches 10x (limited batching --
-    the moderate-BP regime of Table 6)."""
-    w, dim = 16, 400
-    n_out = dim * dim
-    ph = [_movement("loadAB", 2 * dim * dim * w)]
-    comp_bp = dim * (cm.bp_mult(w) + cm.BP_ADD) * _bp_batches(n_out, w)
-    comp_bs = dim * (cm.bs_mult(w) + cm.bs_add(2 * w)) * _bs_batches(n_out)
-    ph.append(_phase("mac", comp_bp, comp_bs))
-    ph.append(_movement("storeC", dim * dim * 2 * w))
-    return ph
+brightness_trace = _shim("brightness")
+kmeans_trace = _shim("kmeans")
+keccak_trace = _shim("keccak")
+fir_trace = _shim("fir")
+gemm_trace = _shim("gemm")
+gemv_trace = _shim("gemv")
+conv2d_trace = _shim("conv2d")
+downsample_trace = _shim("downsample")
+vector_add_trace = _shim("vector_add")
+axpy_trace = _shim("axpy")
+pooling_trace = _shim("pooling")
+prefix_sum_trace = _shim("prefix_sum")
+histogram_trace = _shim("histogram")
+hdc_trace = _shim("hdc")
+bitweave_db_trace = _shim("bitweave_db")
+xnor_net_trace = _shim("xnor_net")
+radix_sort_trace = _shim("radix_sort")
+db_query_trace = _shim("db_query")
 
-
-def gemv_trace() -> list[Phase]:
-    return _gemv_phases("gemv", 4096, 512)
-
-
-def conv2d_trace() -> list[Phase]:
-    """Single 3x3 conv, 256x56x56 output (an ImageNet mid layer)."""
-    return _conv_layer("conv", 256 * 56 * 56)
-
-
-def downsample_trace() -> list[Phase]:
-    """2x2 average downsample of a 1024x1024 16-bit image: 3 adds + shift
-    per output. The stride-2 window regroup is a zero-cost logical remap in
-    ES-BP but a physical inter-column shuffle in EP-BS (Challenge 3),
-    costing a half-density restream."""
-    w = 16
-    n_out = 512 * 512
-    ph = [_movement("in", 4 * n_out * w)]
-    ph.append(_phase("regroup", 0, _xfer(4 * n_out * w * 0.5)))
-    comp_bp = (3 * cm.BP_ADD + cm.bp_shift(2)) * _bp_batches(n_out, w)
-    comp_bs = 3 * cm.bs_add(w) * _bs_batches(n_out)
-    ph.append(_phase("avg", comp_bp, comp_bs))
-    ph.append(_movement("out", n_out * w))
-    return ph
-
-
-# ---------------------------------------------------------------------------
-# Balanced applications (band 1.0 - 1.15x)
-# ---------------------------------------------------------------------------
-
-def vector_add_trace() -> list[Phase]:
-    """The Table-4 running example at 2K elements (band-interior; the 1K
-    point sits exactly at the published 1.15x band edge)."""
-    c_bp = MICROKERNELS["vector_add"].cost(Layout.BP, 2048, 16)
-    c_bs = MICROKERNELS["vector_add"].cost(Layout.BS, 2048, 16)
-    return [_phase("vadd", c_bp.total, c_bs.total)]
-
-
-def axpy_trace() -> list[Phase]:
-    """y = a*x + y, 64K elements, 32-bit (movement-dominated at this size)."""
-    w, n = 32, 65536
-    ph = [_movement("load", 2 * n * w)]
-    comp_bp = (cm.bp_mult(w) + cm.BP_ADD) * _bp_batches(n, w)
-    comp_bs = (cm.bs_mult(w) + cm.bs_add(w)) * _bs_batches(n)
-    ph.append(_phase("fma", comp_bp, comp_bs))
-    ph.append(_movement("store", n * w))
-    return ph
-
-
-def pooling_trace() -> list[Phase]:
-    """2x2 max-pool over 512x512 outputs, 16-bit, streamed."""
-    w, n_out = 16, 256 * 256
-    ph = [_movement("in", 4 * n_out * w)]
-    comp_bp = 3 * cm.minmax_bp(w) * _bp_batches(n_out, w)
-    comp_bs = 3 * cm.minmax_bs(w) * _bs_batches(n_out)
-    ph.append(_phase("max", comp_bp, comp_bs))
-    ph.append(_movement("out", n_out * w))
-    return ph
-
-
-def prefix_sum_trace() -> list[Phase]:
-    """Hillis-Steele scan over 64k 16-bit elements: log2(n) add sweeps,
-    movement-dominated (Challenge 2 batching)."""
-    w, n = 16, 65536
-    steps = int(math.log2(n))
-    ph = [_movement("in", n * w)]
-    comp_bp = steps * cm.BP_ADD * _bp_batches(n, w)
-    comp_bs = steps * cm.bs_add(w) * _bs_batches(n)
-    # each sweep re-streams the shifted operand
-    ph.append(_movement("shift_streams", steps * n * w / 8))
-    ph.append(_phase("sweeps", comp_bp, comp_bs))
-    ph.append(_movement("out", n * w))
-    return ph
-
-
-# ---------------------------------------------------------------------------
-# BS-preference applications (band 0.6 - 0.9x: BS faster)
-# ---------------------------------------------------------------------------
-
-def histogram_trace() -> list[Phase]:
-    """256-bin histogram of 64k 8-bit samples via bit-sliced bin matching
-    (equal) + popcount accumulation: bit-centric, full-density (Challenge 1
-    favours BS)."""
-    w, n, bins_groups = 8, 65536, 16
-    ph = [_movement("in", n * w)]
-    for g in range(bins_groups):
-        eq_bp = cm.equal_bp(w) * _bp_batches(n, w)
-        eq_bs = cm.equal_bs(w) * _bs_batches(n)
-        ph.append(_phase(f"match{g}", eq_bp, eq_bs))
-        # BP must popcount the match masks (D&C); BS counts serially in place
-        ph.append(_phase(f"count{g}", cm.bitcount_bp(w) * _bp_batches(n, w),
-                         cm.reduction_bs(w) * _bs_batches(n)))
-    ph.append(_movement("bins_out", 256 * 32))
-    return ph
-
-
-def hdc_trace() -> list[Phase]:
-    """Hyperdimensional computing: hamming distance of a 8192-bit query
-    against 4096 class vectors: XOR + popcount. Bit-level DoP saturates the
-    1-bit PEs; BS also emits half-width counts (Table-5 bitcount
-    convention), while BP pays the D&C popcount and word-width readout."""
-    d, classes, w = 8192, 4096, 16
-    n_bits = d * classes
-    n_words = n_bits // w
-    ph = [_movement("load_vectors", n_bits)]
-    xor_bp = cm.BP_LOGIC * _bp_batches(n_words, w)
-    xor_bs = 1 * _bs_batches(n_bits)
-    ph.append(_phase("xor", xor_bp, xor_bs))
-    pc_bp = cm.bitcount_bp(w) * _bp_batches(n_words, w)
-    pc_bs = cm.bitcount_bs(w) * _bs_batches(n_bits)
-    ph.append(_phase("popcount", pc_bp, pc_bs))
-    red_bp = cm.reduction_bp(d // w) * _bp_batches(classes, w)
-    red_bs = cm.reduction_bs(w) * _bs_batches(classes)
-    ph.append(_phase("reduce", red_bp, red_bs))
-    ph.append(_phase("scores_out", _xfer(n_words * w), _xfer(n_words * w / 2)))
-    return ph
-
-
-def bitweave_db_trace() -> list[Phase]:
-    """BitWeaving column scans (database predicates over 2b/4b codes, 64k
-    rows each): BS streams full-density vertical bit planes (b bits + 0.5b
-    predicate planes per code); BP must pad codes to byte containers."""
-    ph = []
-    n = 65536
-    for reps, bits in [(4, 2), (4, 4)]:
-        for r in range(reps):
-            load_bp = _xfer(n * 8)  # byte-padded codes
-            load_bs = _xfer(n * bits * 1.5)  # density = code + predicate planes
-            comp = cm.bitweave_compute(bits, Layout.BP)
-            ph.append(_phase(f"scan{bits}b_{r}.load", load_bp, load_bs))
-            ph.append(_phase(f"scan{bits}b_{r}.pred", comp, comp))
-            ph.append(_movement(f"scan{bits}b_{r}.out", n / 8))
-    return ph
-
-
-def xnor_net_trace() -> list[Phase]:
-    """Binary conv net (XNOR-Net): xnor + popcount MACs, binary activations
-    (the paper's canonical BS-friendly AI workload). Same density/readout
-    conventions as HDC."""
-    w = 16
-    ph = []
-    for name, n_out, k in [("c1", 128 * 28 * 28, 288), ("c2", 256 * 14 * 14, 576)]:
-        n_macs = n_out * k
-        n_words = n_macs // w
-        ph.append(_movement(f"{name}.in", n_macs))
-        xnor_bp = cm.BP_LOGIC * _bp_batches(n_words, w)
-        xnor_bs = 1 * _bs_batches(n_macs)
-        pc_bp = cm.bitcount_bp(w) * _bp_batches(n_words, w)
-        pc_bs = cm.bitcount_bs(w) * _bs_batches(n_macs)
-        ph.append(_phase(f"{name}.xnor", xnor_bp, xnor_bs))
-        ph.append(_phase(f"{name}.popc", pc_bp, pc_bs))
-        ph.append(_phase(f"{name}.out", _xfer(n_words * w), _xfer(n_words * w / 2)))
-    return ph
-
-
-# ---------------------------------------------------------------------------
-# Hybrid-recommended applications
-# ---------------------------------------------------------------------------
-
-def radix_sort_trace() -> list[Phase]:
-    """LSD radix sort, 64k 16-bit keys, 4-bit digits: per pass, digit
-    extraction + match counting is bit-level (BS-friendly); the scatter is a
-    word-level permutation (BP-friendly logical shuffle)."""
-    w, n, digit = 16, 65536, 4
-    passes = w // digit
-    ph = [_movement("keys_in", n * w)]
-    for p in range(passes):
-        cnt_bp = (16 * cm.equal_bp(digit) + cm.bitcount_bp(16)) \
-            * _bp_batches(n, w)
-        cnt_bs = (16 * cm.equal_bs(digit) + cm.reduction_bs(digit)) \
-            * _bs_batches(n)
-        ph.append(_phase(f"count{p}", cnt_bp, cnt_bs, rows_bp=8, rows_bs=64))
-        scan_bp = cm.reduction_bp(16) * 2
-        scan_bs = cm.reduction_bs(16) * 16
-        ph.append(_phase(f"scan{p}", scan_bp, scan_bs, rows_bp=8, rows_bs=64))
-        scat_bp = _xfer(n * w / 4)  # logical-shuffle assisted gather
-        scat_bs = _xfer(n * w) + 2 * n // 512  # physical inter-column moves
-        ph.append(_phase(f"scatter{p}", scat_bp, scat_bs, rows_bp=8, rows_bs=64))
-    ph.append(_movement("keys_out", n * w))
-    return ph
-
-
-def db_query_trace() -> list[Phase]:
-    """SELECT ... WHERE pred GROUP-BY aggregate: bitweave scan (BS) feeding a
-    word-level aggregation (BP)."""
-    n = 65536
-    ph = []
-    load_bp = _xfer(n * 16 * 2 * 1.25)
-    load_bs = _xfer(n * 16 * 2 * 0.5)
-    ph.append(_phase("scan.load", load_bp, load_bs, rows_bp=32, rows_bs=96))
-    comp = cm.bitweave_compute(4, Layout.BP) * 8
-    ph.append(_phase("scan.pred", int(comp * 1.6), comp, rows_bp=32, rows_bs=96))
-    agg_bp = (cm.BP_ADD + cm.minmax_bp(32)) * 64
-    agg_bs = (cm.bs_add(32) + cm.minmax_bs(32)) * 64
-    ph.append(_phase("aggregate", agg_bp, agg_bs, rows_bp=32, rows_bs=96))
-    ph.append(_movement("out", n))
-    return ph
-
-
-# ---------------------------------------------------------------------------
-# Registry + evaluation
-# ---------------------------------------------------------------------------
-
+#: Deprecated registry of shim constructors -- iterate
+#: ``repro.workloads.workload_names("table6")`` instead.
 APP_TRACES: dict[str, Callable[[], list[Phase]]] = {
     "brightness": brightness_trace,
     "kmeans": kmeans_trace,
@@ -497,8 +141,16 @@ APP_TRACES: dict[str, Callable[[], list[Phase]]] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Evaluation (supported API; consumes the IR)
+# ---------------------------------------------------------------------------
+
 def evaluate_app(name: str, sys: SystemParams = PAPER_SYSTEM) -> dict:
-    phases = APP_TRACES[name]()
+    # Phases are built at the registry's PAPER_SYSTEM calibration (the
+    # bespoke `compute` op cycles are baked there); `sys` scales only the
+    # planner's transpose accounting -- the exact semantics of the pre-IR
+    # trace builders, which also pinned SYS = PAPER_SYSTEM.
+    phases = get_workload(name).to_phases()
     p: Plan = plan(phases, sys)
     return {
         "app": name,
@@ -513,4 +165,5 @@ def evaluate_app(name: str, sys: SystemParams = PAPER_SYSTEM) -> dict:
 
 
 def evaluate_all(sys: SystemParams = PAPER_SYSTEM) -> dict[str, dict]:
-    return {name: evaluate_app(name, sys) for name in APP_TRACES}
+    return {name: evaluate_app(name, sys)
+            for name in workload_names("table6")}

@@ -40,6 +40,15 @@ class MicroKernel:
                      n: int = 1, sys: SystemParams = PAPER_SYSTEM) -> int:
         return self.cost_fn(layout, n, width, sys).compute
 
+    # -- canonical IR counterpart (repro.workloads) --------------------------
+    def workload(self, n: int = 1024, width: int = 16):
+        """This kernel as a single-op canonical workload
+        (`repro.workloads.ir.Workload`) -- the hook every evaluation
+        backend plugs into (lazy import: core stays IR-free)."""
+        from repro.workloads.registry import microkernel_workload
+
+        return microkernel_workload(self.name, n=n, width=width)
+
     # -- executable counterpart (repro.pim.executor) -------------------------
     def executed_cycles(self, layout: Layout, width: int = 16,
                         n: int | None = None) -> int:

@@ -250,6 +250,14 @@ def golden_snapshot() -> str:
         lines.append(f"{row.kernel} {row.mode} {c.load} {c.compute} "
                      f"{c.readout} {c.total}")
 
+    lines += ["", "[table6] app bp bs hybrid n_transposes "
+                  "(workload-IR route: repro.workloads + PlannerBackend)"]
+    from repro.workloads import characterize, workload_names
+    for app in workload_names("table6"):
+        s = characterize(app, backends=("planner",))["planner"].summary
+        lines.append(f"{app} {s['bp_cycles']} {s['bs_cycles']} "
+                     f"{s['hybrid_cycles']} {s['n_transposes']}")
+
     lines += ["", "[table7] stage bp bs  (AES per-round, 16-byte state)"]
     for stage in sorted(AES_STAGE):
         bp, bs = AES_STAGE[stage]

@@ -10,10 +10,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cost_model import Layout
-from repro.core.taxonomy import Recommendation, WorkloadFeatures, classify
+from repro.core.taxonomy import Recommendation, classify
 from repro.kernels.bitpack import bitpack
 from repro.kernels.bitparallel_matmul import bitparallel_matmul
 from repro.kernels.bitserial_matmul import bitserial_matmul
+from repro.workloads.ir import Op
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
@@ -34,17 +35,22 @@ def matmul_bp(x: jax.Array, w: jax.Array, interpret: bool = True):
 
 def choose_layout(*, weight_bits: int, m: int, n: int, k: int,
                   mixed_precision: bool = False) -> Recommendation:
-    """Layout advisor for one quantized matmul (Table-8 features)."""
-    f = WorkloadFeatures(
-        precision_bits=weight_bits,
-        dop=m * n,
-        control_intensity=0.0,
-        bit_level_fraction=1.0 if weight_bits <= 2 else
-        0.7 if weight_bits <= 4 else 0.2,
-        working_set_bits=weight_bits * 4,
-        mixed_precision=mixed_precision,
-    )
-    return classify(f).recommendation
+    """Layout advisor for one quantized matmul (Table-8 features).
+
+    Builds a canonical IR matmul op and classifies its feature lowering.
+    The resident working set is derived from the *actual* operand
+    footprint of the weight-stationary k-deep dot product
+    (``ir.matmul_working_set_bits``: the k-element weight column plus the
+    double-width accumulator) -- so deep contractions overflow the
+    128-row BS column and correctly flip the recommendation to BP
+    (Challenge 2).  The old implementation hardcoded ``weight_bits * 4``
+    and ignored k entirely.
+    """
+    op = Op(name="matmul", kind="matmul", m=m, k=k, n=n, width=weight_bits,
+            bit_level_fraction=1.0 if weight_bits <= 2 else
+            0.7 if weight_bits <= 4 else 0.2,
+            mixed_precision=mixed_precision)
+    return classify(op.features()).recommendation
 
 
 def layout_aware_matmul(x: jax.Array, w: jax.Array, *, weight_bits: int,

@@ -1,0 +1,43 @@
+"""repro.workloads: one workload IR, many evaluation backends.
+
+Public surface (see README.md in this directory and DESIGN.md Sec. 5):
+
+    from repro.workloads import (
+        Op, Workload,                 # the IR
+        get_workload, list_workloads, workload_names,  # the registry
+        Backend, Report, OpReport,    # the protocol
+        BACKENDS, get_backend,        # backend registry
+        characterize,                 # the entry point
+    )
+
+    characterize("vgg", backends=("analytic", "planner", "executor"))
+
+CLI: ``python -m repro list | characterize | tables``.
+"""
+from repro.workloads.backends import (  # noqa: F401
+    AnalyticBackend,
+    Backend,
+    BACKENDS,
+    ExecutorBackend,
+    OpReport,
+    PallasBackend,
+    PlannerBackend,
+    Report,
+    characterize,
+    get_backend,
+)
+from repro.workloads.ir import (  # noqa: F401
+    Op,
+    Workload,
+    matmul_working_set_bits,
+    op_cost,
+    op_phases,
+)
+from repro.workloads.registry import (  # noqa: F401
+    AES_STAGE,
+    arch_workload,
+    get_workload,
+    list_workloads,
+    microkernel_workload,
+    workload_names,
+)

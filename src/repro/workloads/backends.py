@@ -1,0 +1,386 @@
+"""Backend protocol + the four evaluation backends over the workload IR.
+
+Every backend answers the same question -- "what does this workload cost?"
+-- through a different lens, behind one protocol::
+
+    class Backend(Protocol):
+        name: str
+        def supports(self, workload) -> bool
+        def estimate(self, workload, sys=PAPER_SYSTEM) -> Report
+
+* :class:`AnalyticBackend`  -- the paper's closed-form cycle model
+  (``core.cost_model`` / ``core.microkernels``): per-op
+  load/compute/readout in both static layouts.
+* :class:`PlannerBackend`   -- lowers ops to planner phases and runs the
+  2-state hybrid DP (``core.planner``): BP/BS/hybrid + schedule.
+* :class:`ExecutorBackend`  -- lowers ops to ``repro.pim.programs``
+  micro-op programs where available and reports *executed* cycle counts;
+  matmul/conv MACs decompose into ``multu`` + ``vector_add`` programs.
+  Documented executed-vs-analytic calibration deltas (DESIGN.md Sec. 8)
+  surface in ``OpReport.note`` and ``Report.notes``.
+* :class:`PallasBackend`    -- dispatches the ``kernels.ops`` Pallas
+  matmuls on a representative tile and measures wall-clock (on CPU these
+  are interpret-mode correctness-path timings, as in benchmarks/).
+
+``Report.summary`` keys shared by the cycle backends: ``bp_cycles``,
+``bs_cycles`` (static totals over supported ops) plus backend-specific
+extras (``hybrid_cycles``/``schedule`` for the planner, ``coverage`` for
+the executor).  ``OpReport.energy_nj`` is reserved: the source paper
+publishes no energy model, so no backend populates it yet.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Union, runtime_checkable
+
+from repro.core.cost_model import Layout
+from repro.core.params import SystemParams, PAPER_SYSTEM
+from repro.workloads.ir import Op, Workload, op_cost, op_phases
+
+
+@dataclasses.dataclass(frozen=True)
+class OpReport:
+    """Per-op result row of one backend."""
+
+    op: str
+    kind: str
+    supported: bool = True
+    bp_cycles: Optional[int] = None
+    bs_cycles: Optional[int] = None
+    #: layout -> (load, compute, readout); analytic backend only
+    breakdown: Optional[dict] = None
+    #: wall-clock microseconds (Pallas backend)
+    bp_us: Optional[float] = None
+    bs_us: Optional[float] = None
+    #: reserved -- the paper publishes no energy model (DESIGN.md Sec. 5)
+    energy_nj: Optional[float] = None
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Report:
+    """One backend's estimate for one workload."""
+
+    workload: str
+    backend: str
+    ops: tuple[OpReport, ...]
+    summary: dict
+    notes: tuple[str, ...] = ()
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """The protocol all evaluation surfaces implement."""
+
+    name: str
+
+    def supports(self, workload: Workload) -> bool:
+        """Can this backend say anything useful about the workload?"""
+        ...
+
+    def estimate(self, workload: Workload,
+                 sys: SystemParams = PAPER_SYSTEM) -> Report:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Analytic
+# ---------------------------------------------------------------------------
+
+class AnalyticBackend:
+    """Closed-form paper cost model: per-op CycleCost in both layouts."""
+
+    name = "analytic"
+
+    def supports(self, workload: Workload) -> bool:
+        return True
+
+    def estimate(self, workload: Workload,
+                 sys: SystemParams = PAPER_SYSTEM) -> Report:
+        rows = []
+        tot = {Layout.BP: 0, Layout.BS: 0}
+        for op in workload.ops:
+            costs = {lay: op_cost(op, lay, sys)
+                     for lay in (Layout.BP, Layout.BS)}
+            for lay, c in costs.items():
+                tot[lay] += c.total
+            rows.append(OpReport(
+                op=op.name, kind=op.kind,
+                bp_cycles=costs[Layout.BP].total,
+                bs_cycles=costs[Layout.BS].total,
+                breakdown={lay.value: (c.load, c.compute, c.readout)
+                           for lay, c in costs.items()}))
+        bp, bs = tot[Layout.BP], tot[Layout.BS]
+        return Report(
+            workload=workload.name, backend=self.name, ops=tuple(rows),
+            summary={"bp_cycles": bp, "bs_cycles": bs,
+                     "bs_over_bp": bs / bp if bp else float("inf")})
+
+
+# ---------------------------------------------------------------------------
+# Planner (hybrid DP)
+# ---------------------------------------------------------------------------
+
+class PlannerBackend:
+    """Lower to planner phases, run the 2-state hybrid DP."""
+
+    name = "planner"
+
+    def supports(self, workload: Workload) -> bool:
+        return True
+
+    def estimate(self, workload: Workload,
+                 sys: SystemParams = PAPER_SYSTEM) -> Report:
+        from repro.core.planner import plan
+
+        phase_groups = [op_phases(op, sys) for op in workload.ops]
+        phases = [p for grp in phase_groups for p in grp]
+        p = plan(phases, sys)
+        rows = []
+        i = 0
+        for op, grp in zip(workload.ops, phase_groups):
+            layouts = p.schedule[i:i + len(grp)]
+            i += len(grp)
+            rows.append(OpReport(
+                op=op.name, kind=op.kind,
+                bp_cycles=sum(ph.bp_cycles for ph in grp),
+                bs_cycles=sum(ph.bs_cycles for ph in grp),
+                note="sched=" + "/".join(l.value for l in layouts)))
+        return Report(
+            workload=workload.name, backend=self.name, ops=tuple(rows),
+            summary={
+                "bp_cycles": p.static_bp,
+                "bs_cycles": p.static_bs,
+                "hybrid_cycles": p.total_cycles,
+                "hybrid_speedup": p.hybrid_speedup,
+                "is_hybrid": p.is_hybrid,
+                "n_transposes": p.n_transposes,
+                "transpose_cycles": p.transpose_cycles_total,
+                "best_static_layout": p.best_static_layout.value,
+            })
+
+
+# ---------------------------------------------------------------------------
+# Executor (micro-op programs on the simulated array)
+# ---------------------------------------------------------------------------
+
+class ExecutorBackend:
+    """Executed micro-op cycle counts (``repro.pim.programs``).
+
+    Coverage: ``kernel`` ops with a builder in ``programs.BUILDERS`` run
+    directly; ``matmul``/``conv`` MACs lower to k x ``multu`` +
+    (k-1) x ``vector_add`` programs per output batch.  ``movement`` and
+    bespoke ``compute`` ops have no micro-op program (the bus and the
+    hand-calibrated crypto rounds are modelled analytically only) and are
+    reported unsupported; ``summary["coverage"]`` is the supported-op
+    fraction.
+    """
+
+    name = "executor"
+
+    def supports(self, workload: Workload) -> bool:
+        return any(self._op_supported(op) for op in workload.ops)
+
+    @staticmethod
+    def _op_supported(op: Op) -> bool:
+        from repro.pim import programs as pr
+
+        if op.kind in ("matmul", "conv"):
+            return True
+        return (op.kind == "kernel"
+                and (op.kernel, Layout.BP) in pr.BUILDERS
+                and (op.kernel, Layout.BS) in pr.BUILDERS)
+
+    @staticmethod
+    def _mac_cycles(op: Op, layout: Layout, sys: SystemParams) -> int:
+        """k multiplies + (k-1) double-width accumulates per output,
+        times capacity batches over the outputs."""
+        from repro.pim import programs as pr
+
+        k = op.k
+        outs = op.m * op.n if op.kind == "matmul" else op.n
+        mult = pr.build("multu", layout, width=op.width).cycles
+        add = pr.build("vector_add", layout, width=2 * op.width).cycles
+        batches = (sys.bp_batches(outs, op.width) if layout is Layout.BP
+                   else sys.bs_batches(outs))
+        return (k * mult + (k - 1) * add) * batches
+
+    def estimate(self, workload: Workload,
+                 sys: SystemParams = PAPER_SYSTEM) -> Report:
+        from repro.pim import programs as pr
+
+        rows, notes = [], []
+        tot = {Layout.BP: 0, Layout.BS: 0}
+        supported = 0
+        for op in workload.ops:
+            if op.kind == "kernel" and self._op_supported(op):
+                cyc, note_parts = {}, []
+                for lay in (Layout.BP, Layout.BS):
+                    n_eff = op.n if op.kernel == "reduction" \
+                        and lay is Layout.BP else None
+                    prog = pr.build(op.kernel, lay, width=op.width, n=n_eff)
+                    batches = (sys.bp_batches(op.n, op.width)
+                               if lay is Layout.BP else sys.bs_batches(op.n))
+                    cyc[lay] = prog.cycles * batches
+                    if prog.expected_delta:
+                        note_parts.append(
+                            f"{lay.value}: delta={prog.expected_delta:+d} "
+                            f"({prog.calibration_note})")
+                note = "; ".join(note_parts)
+                if note:
+                    notes.append(f"{op.name}: {note}")
+                rows.append(OpReport(op=op.name, kind=op.kind,
+                                     bp_cycles=cyc[Layout.BP],
+                                     bs_cycles=cyc[Layout.BS], note=note))
+            elif op.kind in ("matmul", "conv"):
+                cyc = {lay: self._mac_cycles(op, lay, sys)
+                       for lay in (Layout.BP, Layout.BS)}
+                rows.append(OpReport(
+                    op=op.name, kind=op.kind, bp_cycles=cyc[Layout.BP],
+                    bs_cycles=cyc[Layout.BS],
+                    note="lowered to multu + vector_add programs"))
+            else:
+                why = ("no micro-op program for kernel "
+                       f"{op.kernel!r}" if op.kind == "kernel" else
+                       f"{op.kind} ops are modelled analytically only")
+                rows.append(OpReport(op=op.name, kind=op.kind,
+                                     supported=False, note=why))
+                continue
+            supported += 1
+            tot[Layout.BP] += rows[-1].bp_cycles
+            tot[Layout.BS] += rows[-1].bs_cycles
+        return Report(
+            workload=workload.name, backend=self.name, ops=tuple(rows),
+            summary={"bp_cycles": tot[Layout.BP], "bs_cycles": tot[Layout.BS],
+                     "coverage": supported / len(workload.ops),
+                     "supported_ops": supported, "total_ops": len(workload.ops)},
+            notes=tuple(notes))
+
+
+# ---------------------------------------------------------------------------
+# Pallas (measured wall-clock of the TPU-analogue kernels)
+# ---------------------------------------------------------------------------
+
+class PallasBackend:
+    """Dispatch ``kernels.ops`` matmuls on a representative tile per
+    matmul/conv op and measure wall-clock for both layouts (BP int8
+    kernel vs BS bitplane kernel at the op's weight precision, capped at
+    8 plane passes).  Dims are clamped to ``tile`` to keep interpret-mode
+    CPU runs bounded; the measured quantity is the per-tile latency, not
+    the full op."""
+
+    name = "pallas"
+
+    def __init__(self, tile: int = 64, interpret: bool = True):
+        self.tile = tile
+        self.interpret = interpret
+
+    def supports(self, workload: Workload) -> bool:
+        return any(op.kind in ("matmul", "conv") for op in workload.ops)
+
+    def _dims(self, op: Op) -> tuple[int, int, int]:
+        t = self.tile
+        if op.kind == "conv":
+            m, k, n = op.n, op.k, op.n
+        else:
+            m, k, n = op.m, op.k, op.n
+        clamp = lambda d: max(32, min(t, d))
+        # bitpack requires K % 32 == 0
+        return clamp(m), max(32, clamp(k) // 32 * 32), clamp(n)
+
+    def estimate(self, workload: Workload,
+                 sys: SystemParams = PAPER_SYSTEM) -> Report:
+        import time
+
+        import numpy as np
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        del sys  # wall-clock backend: the host, not the modelled system
+        rng = np.random.default_rng(0)
+        rows = []
+        tot_bp = tot_bs = 0.0
+        measured = 0
+
+        def clock(fn):
+            fn()  # warmup / compile
+            t0 = time.perf_counter()
+            fn()
+            return (time.perf_counter() - t0) * 1e6
+
+        for op in workload.ops:
+            if op.kind not in ("matmul", "conv"):
+                rows.append(OpReport(op=op.name, kind=op.kind,
+                                     supported=False,
+                                     note="no Pallas kernel for this op"))
+                continue
+            m, k, n = self._dims(op)
+            bits = min(max(1, op.width), 8)
+            x = jnp.asarray(rng.integers(-8, 8, (m, k), dtype=np.int32)
+                            ).astype(jnp.int8)
+            w = jnp.asarray(rng.integers(0, 2 ** bits, (k, n),
+                                         dtype=np.uint32))
+            planes = kops.pack_weights(w, bits, interpret=self.interpret)
+            bp_us = clock(lambda: np.asarray(
+                kops.matmul_bp(x, w.astype(jnp.int8),
+                               interpret=self.interpret)))
+            bs_us = clock(lambda: np.asarray(
+                kops.matmul_bs(x, planes, interpret=self.interpret)))
+            rec = kops.choose_layout(weight_bits=bits, m=op.m or m,
+                                     n=op.n or n, k=op.k or k)
+            rows.append(OpReport(
+                op=op.name, kind=op.kind, bp_us=bp_us, bs_us=bs_us,
+                note=f"tile={m}x{k}x{n}@{bits}b; choose_layout={rec.value}"))
+            tot_bp += bp_us
+            tot_bs += bs_us
+            measured += 1
+        return Report(
+            workload=workload.name, backend=self.name, ops=tuple(rows),
+            summary={"bp_us": tot_bp, "bs_us": tot_bs,
+                     "measured_ops": measured, "total_ops": len(workload.ops),
+                     "coverage": measured / len(workload.ops)},
+            notes=("wall-clock of interpret-mode Pallas tiles "
+                   "(correctness-path on CPU; see benchmarks/kernels_bench)",)
+            if measured else ())
+
+
+# ---------------------------------------------------------------------------
+# Registry + the single entry point
+# ---------------------------------------------------------------------------
+
+BACKENDS: dict[str, type] = {
+    "analytic": AnalyticBackend,
+    "planner": PlannerBackend,
+    "executor": ExecutorBackend,
+    "pallas": PallasBackend,
+}
+
+
+def get_backend(spec: Union[str, Backend]) -> Backend:
+    if isinstance(spec, str):
+        try:
+            return BACKENDS[spec]()
+        except KeyError:
+            raise KeyError(f"unknown backend {spec!r} "
+                           f"(known: {', '.join(sorted(BACKENDS))})") from None
+    return spec
+
+
+def characterize(workload: Union[str, Workload],
+                 backends=("analytic", "planner"),
+                 sys: SystemParams = PAPER_SYSTEM) -> dict[str, Report]:
+    """THE entry point: one workload, many backends -> {backend: Report}.
+
+    `workload` is a registry name (e.g. ``"vgg"``, ``"mk/multu"``,
+    ``"arch/tinyllama_1_1b"``) or a :class:`Workload` instance; `backends`
+    is a sequence of registry names and/or Backend instances.
+    """
+    from repro.workloads.registry import get_workload
+
+    w = get_workload(workload) if isinstance(workload, str) else workload
+    out: dict[str, Report] = {}
+    for spec in backends:
+        b = get_backend(spec)
+        out[b.name] = b.estimate(w, sys)
+    return out

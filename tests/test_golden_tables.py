@@ -20,7 +20,19 @@ def test_paper_tables_golden_snapshot():
 
 def test_golden_snapshot_covers_all_table5_rows():
     text = GOLDEN.read_text()
-    t5 = text.split("[table5]")[1].split("[table7]")[0]
+    t5 = text.split("[table5]")[1].split("[table6]")[0]
     lines = [ln for ln in t5.strip().splitlines() if ln.strip()]
     rows = lines[1:]  # drop the column-header remainder
     assert len(rows) == len(TABLE5)
+
+
+def test_golden_snapshot_covers_all_table6_apps():
+    """The workload-IR route's per-app numbers are pinned too (ISSUE 3
+    golden-equivalence satellite)."""
+    from repro.workloads import workload_names
+
+    text = GOLDEN.read_text()
+    t6 = text.split("[table6]")[1].split("[table7]")[0]
+    lines = [ln for ln in t6.strip().splitlines() if ln.strip()]
+    rows = lines[1:]
+    assert [ln.split()[0] for ln in rows] == workload_names("table6")

@@ -5,7 +5,8 @@ import pytest
 
 from repro.core import cost_model as cm
 from repro.core import paper_tables as pt
-from repro.core.apps import aes_paper_accounting, aes_trace, evaluate_all
+from repro.core.apps import aes_paper_accounting, evaluate_all
+from repro.workloads import get_workload
 from repro.core.cost_model import Layout, utilization, vector_add_cost
 from repro.core.microkernels import table5_model_row
 from repro.core.params import PAPER_SYSTEM, SINGLE_ARRAY
@@ -150,14 +151,14 @@ def test_aes_dp_planner_matches_or_beats_hand_schedule():
     """The DP planner must reproduce the paper's hybrid structure (SubBytes
     in BS, everything else BP) and may only be cheaper than the hand
     schedule (it saves one transpose by ending in BS)."""
-    p = plan(aes_trace())
+    p = plan(get_workload("aes").to_phases())
     assert p.static_bp == 18624  # faithful-trace BP == published BP
     assert p.static_bs == pt.AES_TOTALS["BS_trace_faithful"]
     assert p.is_hybrid
     assert p.total_cycles <= pt.AES_TOTALS["hybrid"]
     assert pt.AES_TOTALS["hybrid"] - p.total_cycles < 145  # <= 1 transpose
     # every SubBytes phase runs in BS, every MixColumns in BP
-    for ph, layout in zip(aes_trace(), p.schedule):
+    for ph, layout in zip(get_workload("aes").to_phases(), p.schedule):
         if ph.name.startswith("SB"):
             assert layout == Layout.BS
         if ph.name.startswith("MC"):
@@ -168,7 +169,7 @@ def test_aes_transpose_sensitivity_10x():
     """Sec. 5.4: 10x transpose core => ~2.6% runtime, 2.59x hybrid speedup.
     (Our DP schedule has one fewer transpose, hence >= the published
     speedup and <= the published increase.)"""
-    s = transpose_sensitivity(aes_trace(), core_cycles=10)
+    s = transpose_sensitivity(get_workload("aes").to_phases(), core_cycles=10)
     assert s["runtime_increase_pct"] < pt.AES_SENSITIVITY_10X[
         "runtime_increase_pct"] + 0.2
     assert s["hybrid_speedup"] >= pt.AES_SENSITIVITY_10X["hybrid_speedup"]
@@ -177,7 +178,7 @@ def test_aes_transpose_sensitivity_10x():
 def test_hybrid_profitability_threshold():
     """Hybrid stays optimal for AES far beyond the paper's conservative
     51-cycle reference threshold (Sec. 5.5)."""
-    thr = hybrid_profitability_threshold(aes_trace())
+    thr = hybrid_profitability_threshold(get_workload("aes").to_phases())
     assert thr > pt.HYBRID_THRESHOLD_CYCLES
 
 
