@@ -1,0 +1,92 @@
+"""Sweep-engine benchmarks: one-jitted-call grid evaluation throughput vs
+the scalar cost-model loop, plus a vectorized-vs-scalar oracle row.
+
+Rows:
+
+* ``sweep_grid_jit``      -- the full default grid (18 mk/* x 2 layouts x
+  4 widths x 9 iso-area geometries) through `repro.sweep.vectorized.
+  eval_grid` (compile excluded by the warmup call in `time_us`).
+* ``sweep_scalar_loop``   -- the same grid through the scalar
+  `microkernels.kernel_cost` path (the pre-sweep baseline; derived field
+  reports the vectorized speedup).
+* ``sweep_vs_scalar``     -- oracle row: both paths must agree exactly on
+  a deterministic sample of grid cells (``match=``).
+* ``sweep_cache_roundtrip`` -- run_sweep twice against a temp cache dir;
+  derived field asserts the second call hits.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, quick, time_us
+
+
+def _grid_args():
+    from repro.core.microkernels import MICROKERNELS
+    from repro.sweep import iso_area_family
+
+    kernel_ns = tuple(
+        (k, 8192 if k == "relu" else 1024) for k in sorted(MICROKERNELS))
+    widths = (4, 8, 16, 32)
+    geo = iso_area_family()
+    rows = [g.rows for g in geo]
+    cols = [g.cols for g in geo]
+    arrays = [g.arrays for g in geo]
+    bw = [g.row_bandwidth_bits for g in geo]
+    return kernel_ns, widths, rows, cols, arrays, bw
+
+
+def _scalar_grid(kernel_ns, widths, geo_systems):
+    from repro.core.cost_model import Layout
+    from repro.core.microkernels import kernel_cost
+
+    out = np.zeros((len(kernel_ns), 2, len(widths), len(geo_systems), 3),
+                   np.int64)
+    for k, (name, n) in enumerate(kernel_ns):
+        for li, lay in enumerate((Layout.BP, Layout.BS)):
+            for wi, w in enumerate(widths):
+                for gi, s in enumerate(geo_systems):
+                    c = kernel_cost(name, lay, n=n, width=w, sys=s)
+                    out[k, li, wi, gi] = (c.load, c.compute, c.readout)
+    return out
+
+
+def bench_sweep_grid():
+    from repro.sweep import iso_area_family
+    from repro.sweep.vectorized import eval_grid
+
+    kernel_ns, widths, rows, cols, arrays, bw = _grid_args()
+    run = lambda: np.asarray(
+        eval_grid(kernel_ns, widths, rows, cols, arrays, bw))
+    us_vec = time_us(run)
+    n_cells = len(kernel_ns) * 2 * len(widths) * len(rows)
+    rows_out = [emit("sweep_grid_jit", us_vec, f"cells={n_cells}")]
+
+    geo_systems = [g.system() for g in iso_area_family()]
+    us_scalar = time_us(
+        lambda: _scalar_grid(kernel_ns, widths, geo_systems),
+        repeat=1 if quick() else 3)
+    rows_out.append(emit("sweep_scalar_loop", us_scalar,
+                         f"vec_speedup={us_scalar / max(us_vec, 1e-9):.1f}x"))
+
+    vec = run()
+    scalar = _scalar_grid(kernel_ns, widths, geo_systems)
+    match = bool((vec.astype(np.int64) == scalar).all())
+    rows_out.append(emit("sweep_vs_scalar", 0.0, f"match={match}"))
+    return rows_out
+
+
+def bench_sweep_cache():
+    from repro.sweep import SweepSpec, run_sweep
+
+    spec = SweepSpec.default(workloads=("mk/vector_add", "mk/multu"),
+                             widths=(8, 16))
+    with tempfile.TemporaryDirectory() as td:
+        us = time_us(lambda: run_sweep(spec, cache_dir=td), repeat=1)
+        hit = run_sweep(spec, cache_dir=td).cache["hit"]
+    return [emit("sweep_cache_roundtrip", us, f"match={bool(hit)}")]
+
+
+ALL = [bench_sweep_grid, bench_sweep_cache]

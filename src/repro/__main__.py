@@ -10,6 +10,16 @@ Subcommands:
                        table5+table6 workload through the cycle backends,
                        summaries written to
                        ``bench-artifacts/characterize.json``.
+                       ``--geometry RxCxA[@BW]`` re-costs under a
+                       non-default system geometry.
+* ``sweep``         -- the design-space sweep engine (repro.sweep):
+                       workloads x widths x iso-area geometries in one
+                       jitted batched evaluation, content-hash cached;
+                       writes ``bench-artifacts/sweep.json`` and
+                       ``bench-artifacts/guidelines.json``.
+* ``guidelines``    -- print the machine-derived layout guidelines
+                       (crossover table + rules + hybrid-win set) and
+                       write ``bench-artifacts/guidelines.json``.
 * ``tables``        -- the model-reproduced paper tables (the golden
                        snapshot text; see tests/golden/paper_tables.txt).
 
@@ -18,7 +28,10 @@ Examples::
     python -m repro list
     python -m repro characterize vgg --backends analytic,planner,executor
     python -m repro characterize mk/multu aes --ops
+    python -m repro characterize aes --geometry 128x512x64
     python -m repro characterize --quick
+    python -m repro sweep --widths 4,8,16,32
+    python -m repro guidelines
 """
 from __future__ import annotations
 
@@ -83,7 +96,24 @@ def cmd_list(args) -> int:
     return 0
 
 
+def _parse_geometry(text):
+    """``ROWSxCOLSxARRAYS[@ROW_BW]`` -> SystemParams (e.g. 128x512x64)."""
+    from repro.sweep import Geometry
+
+    body, _, bw = text.partition("@")
+    try:
+        rows, cols, arrays = (int(p) for p in body.lower().split("x"))
+        bw_bits = int(bw) if bw else 512
+    except ValueError:
+        raise SystemExit(
+            f"error: bad --geometry {text!r} (want ROWSxCOLSxARRAYS[@BW], "
+            "e.g. 128x512x64 or 128x512x512@512)") from None
+    return Geometry(rows=rows, cols=cols, arrays=arrays,
+                    row_bandwidth_bits=bw_bits).system()
+
+
 def cmd_characterize(args) -> int:
+    from repro.core.params import PAPER_SYSTEM
     from repro.workloads import characterize, workload_names
 
     spec = args.backends or ("analytic,planner,executor" if args.quick
@@ -97,10 +127,12 @@ def cmd_characterize(args) -> int:
     if not names:
         print("error: no workloads given (or use --quick)", file=sys.stderr)
         return 2
+    system = (_parse_geometry(args.geometry) if args.geometry
+              else PAPER_SYSTEM)
     artifact: dict[str, dict] = {}
     full: dict[str, dict] = {}
     for name in names:
-        reports = characterize(name, backends=backends)
+        reports = characterize(name, backends=backends, sys=system)
         print(f"{name}:")
         for rep in reports.values():
             _print_report(rep, show_ops=args.ops)
@@ -118,6 +150,77 @@ def cmd_characterize(args) -> int:
         with open(args.json, "w") as f:
             json.dump(full, f, indent=1, sort_keys=True)
         print(f"# wrote full reports to {args.json}")
+    return 0
+
+
+def _build_sweep_spec(args):
+    from repro.sweep import SweepSpec, iso_area_family
+
+    widths = tuple(int(w) for w in args.widths.split(",") if w.strip())
+    geometries = iso_area_family()
+    if args.geometries:
+        geometries = geometries[:args.geometries]
+    return SweepSpec.default(
+        workloads=args.workloads or None, widths=widths,
+        geometries=geometries, n_override=args.n)
+
+
+def cmd_sweep(args) -> int:
+    from repro.sweep import cache_stats, guidelines, run_sweep
+
+    spec = _build_sweep_spec(args)
+    result = run_sweep(spec, use_cache=not args.no_cache)
+    print(f"sweep: {result.breakdown.shape[0]} workloads x 2 layouts x "
+          f"{len(spec.widths)} widths x {len(spec.geometries)} geometries "
+          f"({result.summary()['grid_points']} grid points)")
+    print(f"cache: {'hit' if result.cache['hit'] else 'miss'} "
+          f"(key {result.cache['key']})")
+    g = guidelines(result, include_hybrid=not args.no_hybrid)
+    for name in sorted(g["crossover"]):
+        c = g["crossover"][name]
+        ws = "/".join(str(w) for w in c["bs_win_widths"]) or "-"
+        print(f"  {name:20s} crossover_width={c['crossover_width']:<3d} "
+              f"bs_wins={ws}")
+
+    os.makedirs(_artifact_dir(), exist_ok=True)
+    gpath = os.path.join(_artifact_dir(), "guidelines.json")
+    with open(gpath, "w") as f:
+        json.dump(g, f, indent=1, sort_keys=True)
+    spath = os.path.join(_artifact_dir(), "sweep.json")
+    with open(spath, "w") as f:
+        json.dump({"spec": spec.to_dict(), "summary": result.summary(),
+                   "cache": result.cache,
+                   "cache_stats": cache_stats(),
+                   "elapsed_s": result.elapsed_s}, f, indent=1,
+                  sort_keys=True)
+    print(f"# wrote {gpath} and {spath}")
+    if args.json:
+        full = {"guidelines": g, "totals": result.totals.tolist(),
+                "breakdown": result.breakdown.tolist(),
+                "bs_feasible": result.bs_feasible.tolist(),
+                "bp_feasible": result.bp_feasible.tolist()}
+        with open(args.json, "w") as f:
+            json.dump(full, f, indent=1, sort_keys=True)
+        print(f"# wrote full surfaces to {args.json}")
+    return 0
+
+
+def cmd_guidelines(args) -> int:
+    from repro.sweep import guidelines, guidelines_lines
+
+    g = guidelines(use_cache=not args.no_cache)
+    print("# crossover table (paper geometry; "
+          "workload crossover_width bs_win_widths)")
+    for line in guidelines_lines(g):
+        print(line)
+    print("\n# derived rules")
+    for rule in g["rules"]:
+        print(f"- {rule}")
+    os.makedirs(_artifact_dir(), exist_ok=True)
+    gpath = os.path.join(_artifact_dir(), "guidelines.json")
+    with open(gpath, "w") as f:
+        json.dump(g, f, indent=1, sort_keys=True)
+    print(f"\n# wrote {gpath}")
     return 0
 
 
@@ -155,7 +258,38 @@ def main(argv=None) -> int:
                              "summaries to bench-artifacts/characterize.json")
     p_char.add_argument("--json", default=None, metavar="PATH",
                         help="dump full reports (per-op rows) as JSON")
+    p_char.add_argument("--geometry", default=None, metavar="RxCxA[@BW]",
+                        help="system geometry rows x cols x arrays "
+                             "(optional @row-bus-bits), e.g. 128x512x64")
     p_char.set_defaults(fn=cmd_characterize)
+
+    p_sweep = sub.add_parser(
+        "sweep", help="design-space sweep over workload x width x geometry")
+    p_sweep.add_argument("workloads", nargs="*",
+                         help="mk/* workload names (default: all mk/*)")
+    p_sweep.add_argument("--widths", default="4,8,16,32",
+                         help="comma list of operand widths")
+    p_sweep.add_argument("--geometries", type=int, default=0, metavar="N",
+                         help="use only the first N iso-area geometries "
+                              "(default: the full family)")
+    p_sweep.add_argument("--n", type=int, default=None,
+                         help="override every workload's element count")
+    p_sweep.add_argument("--no-cache", action="store_true",
+                         help="skip the sweep-cache (force re-evaluation)")
+    p_sweep.add_argument("--no-hybrid", action="store_true",
+                         help="skip the Table-6 planner hybrid-win pass")
+    p_sweep.add_argument("--quick", action="store_true",
+                         help="CI smoke mode (the default grid is already "
+                              "one jitted call; kept for CI symmetry)")
+    p_sweep.add_argument("--json", default=None, metavar="PATH",
+                         help="dump the full cost surfaces as JSON")
+    p_sweep.set_defaults(fn=cmd_sweep)
+
+    p_guide = sub.add_parser(
+        "guidelines", help="machine-derived layout guidelines")
+    p_guide.add_argument("--no-cache", action="store_true",
+                         help="skip the sweep-cache (force re-evaluation)")
+    p_guide.set_defaults(fn=cmd_guidelines)
 
     p_tab = sub.add_parser("tables", help="model-reproduced paper tables")
     p_tab.set_defaults(fn=cmd_tables)

@@ -29,12 +29,23 @@ executed_vs_analytic` differences the two, and tests/test_microcode.py fails
 if a formula drifts from what the primitives actually require (the
 validation contract is documented in src/repro/pim/README.md; the few
 documented per-width deltas live in DESIGN.md Sec. 8).
+
+Single source of truth (design-space sweep engine)
+--------------------------------------------------
+Each Table-5 kernel is described once, declaratively, by a
+:class:`KernelRecipe`: per-layout compute cycles and input/output movement
+written against the tiny numeric namespace :class:`ScalarOps` provides
+(``ceil_div`` / ``floor_log2`` / ``ceil_log2`` / ``where`` / ``by_width``).
+The scalar public functions below (``bp_mult``, ``bs_add``, ...) and the
+`repro.core.microkernels` assembly are thin wrappers evaluating the recipes
+with :data:`SCALAR_OPS`; `repro.sweep.vectorized` evaluates the *same*
+recipes with a jnp namespace so a whole (width x geometry) grid costs one
+jitted call.  tests/test_sweep.py pins the two evaluations bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-import math
 from typing import Optional
 
 from repro.core.params import SystemParams, PAPER_SYSTEM
@@ -80,139 +91,88 @@ BS_SHIFT = 0
 BS_MUX1 = 4  # per bit
 
 
-def bp_mult(width: int) -> int:
-    """N-bit word multiply: N+2 cycles (Table 2)."""
-    return width + 2
+# ---------------------------------------------------------------------------
+# The numeric namespace the shared kernel formulas are written against
+# ---------------------------------------------------------------------------
+
+class ScalarOps:
+    """Python-int evaluation of the shared kernel formulas.
+
+    `repro.sweep.vectorized.JnpOps` provides the same vocabulary over jnp
+    arrays; every recipe below must stay exact under both (the sweep
+    equality suite enforces it).
+    """
+
+    @staticmethod
+    def ceil_div(a: int, b: int) -> int:
+        return -(-a // b)
+
+    @staticmethod
+    def maximum(a: int, b: int) -> int:
+        return max(a, b)
+
+    @staticmethod
+    def where(cond: bool, a: int, b: int) -> int:
+        return a if cond else b
+
+    @staticmethod
+    def floor_log2(x: int) -> int:
+        return int(x).bit_length() - 1
+
+    @staticmethod
+    def ceil_log2(x: int) -> int:
+        """ceil(log2(max(2, x))) without floats (exact at powers of two)."""
+        return (max(2, int(x)) - 1).bit_length()
+
+    @staticmethod
+    def by_width(width: int, table: dict, fallback: int) -> int:
+        """Per-width calibration-dict select with a closed-form fallback."""
+        return table.get(width, fallback)
 
 
-def bp_shift(k: int) -> int:
-    return k
-
-
-def bs_add(width: int) -> int:
-    """Ripple bit-serial add: 1 cycle per bit."""
-    return width * BS_ADD1
-
-
-def bs_sub(width: int) -> int:
-    return width * BS_ADD1
-
-
-def bs_mult(width: int) -> int:
-    """Shift-and-add multiply: W partial adds of W bits each => W^2.
-    (Table 3: 1024 cycles @32b; Table 5: 256 @16b.)"""
-    return width * width
-
-
-def bs_mux(width: int) -> int:
-    return BS_MUX1 * width
+SCALAR_OPS = ScalarOps()
 
 
 # ---------------------------------------------------------------------------
-# Derived word-level kernels (compute-only cycles), Table 3 / Table 5 calibrated
+# Kernel recipes: ONE declarative description per Table-5 kernel
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelRecipe:
+    """Backend-parameterized Table-5 kernel description.
+
+    ``compute[layout](ops, width, n)`` is the per-batch compute-cycle
+    formula; ``in_half_bits`` / ``out_half_bits`` give data movement in
+    *half-bit* units (2x the bit count) so the fractional operand densities
+    of Table 5 (1.5x, 2.5x, nw/2, ...) stay exact integers under both the
+    scalar and the jnp evaluator.  ``batched=False`` kernels (the BitWeaving
+    scans) publish flat compute costs that do not scale with capacity
+    batches.
+    """
+
+    name: str
+    compute: dict        # Layout -> Callable[(ops, width, n)] -> cycles
+    in_half_bits: dict   # Layout -> Callable[(width, n)] -> 2x input bits
+    out_half_bits: dict  # Layout -> Callable[(width, n)] -> 2x output bits
+    batched: bool = True
+
+
+def _r(name, *, bp, bs, in_bp, in_bs=None, out_bp, out_bs=None, batched=True):
+    return KernelRecipe(
+        name=name,
+        compute={Layout.BP: bp, Layout.BS: bs},
+        in_half_bits={Layout.BP: in_bp,
+                      Layout.BS: in_bp if in_bs is None else in_bs},
+        out_half_bits={Layout.BP: out_bp,
+                       Layout.BS: out_bp if out_bs is None else out_bs},
+        batched=batched,
+    )
+
 
 # MIN/MAX (BP, "shift-mask" variant): sub + sign-extract shift + mask ops.
 # Published: 21 @16b (Table 5), 36 @32b (Table 3) -- no single shift-count
 # formula fits both (DESIGN.md Sec. 8); calibrated per width, fallback w+5.
 _MINMAX_BP_CALIB = {16: 21, 32: 36}
-
-
-def minmax_bp(width: int) -> int:
-    return _MINMAX_BP_CALIB.get(width, width + 5)
-
-
-def minmax_bs(width: int) -> int:
-    """sub (w) + synthesized per-bit MUX select (4w) + conditional copy (w)."""
-    return 6 * width  # 96 @16b, 192 @32b  (Tables 5/3)
-
-
-def div_bp(width: int) -> int:
-    """Restoring division, word datapath: calibrated 2.5*w^2 (640 @16b, T5)."""
-    return int(math.ceil(2.5 * width * width))
-
-
-def div_bs(width: int) -> int:
-    """Restoring division, bit-serial: per quotient bit a w-bit sub + 4-cycle
-    restore MUX => 5*w^2 (1280 @16b, Table 5)."""
-    return 5 * width * width
-
-
-def abs_bp(width: int) -> int:
-    """shift(w-1) sign broadcast + xor + sub-ish fixup: w+2 (18 @16b)."""
-    return width + 2
-
-
-def abs_bs(width: int) -> int:
-    """serialized conditional negate: 3w (48 @16b)."""
-    return 3 * width
-
-
-def if_then_else_bp(width: int) -> int:  # noqa: ARG001  (width-independent)
-    """Predicated select with word mask ops: 7 cycles at any width
-    (7 @16b Table 5; 7 @32b Table 3)."""
-    return 7
-
-
-def if_then_else_bs(width: int) -> int:
-    """Condition (sub w) + 2w masked-and + 1 combine: 3w+1 (49 @16b, 97 @32b)."""
-    return 3 * width + 1
-
-
-def equal_bp(width: int) -> int:
-    """XOR + OR-reduce tree + flag fixups: calibrated w+6 (22 @16b)."""
-    return width + 6
-
-
-def equal_bs(width: int) -> int:
-    """serial XOR (w) + serial OR-reduce (w) + flag (1): 2w+1 (33 @16b)."""
-    return 2 * width + 1
-
-
-def ge0_bp(width: int) -> int:
-    """sign shift (w-1) + xor + incr: w+1 (17 @16b)."""
-    return width + 1
-
-
-def ge0_bs(width: int) -> int:  # noqa: ARG001
-    """read the sign-bit row: 1 cycle."""
-    return 1
-
-
-def gt0_bp(width: int) -> int:
-    """ge_0 (w+1) + nonzero test (w+2): 2w+3 (35 @16b)."""
-    return 2 * width + 3
-
-
-def gt0_bs(width: int) -> int:
-    """sign bit + serial OR-reduce over bits: w+1 (17 @16b)."""
-    return width + 1
-
-
-def relu_k(width: int) -> int:
-    """ReLU mask-and: w+1 in both modes (17 @16b; published row shows equal
-    compute for BP and BS)."""
-    return width + 1
-
-
-def reduction_bp(n: int) -> int:
-    """Tree reduction over n elements: 2*ceil(log2 n) - 1 (19 @1024, T5)."""
-    return 2 * int(math.ceil(math.log2(max(2, n)))) - 1
-
-
-def reduction_bs(width: int) -> int:
-    """Native serial column summation pipeline: w cycles (16 @16b, T5)."""
-    return width
-
-
-def bitcount_bp(width: int) -> int:
-    """Divide-and-conquer popcount: 6*log2(w)+1 (25 @16b, T5)."""
-    return 6 * int(math.log2(width)) + 1
-
-
-def bitcount_bs(width: int) -> int:
-    """Serial summation of bit rows: 5w (80 @16b, T5)."""
-    return 5 * width
 
 
 def bitweave_compute(bits: int, mode: Layout) -> int:
@@ -228,6 +188,281 @@ def bitweave_compute(bits: int, mode: Layout) -> int:
         c = 2 * c - 16
         b *= 2
     return c
+
+
+def _bitweave_recipe(bits: int) -> KernelRecipe:
+    # Packed b-bit codes + (2/b) predicate-constant planes (load rows
+    # 96/64/48 for b=1/2/4 @ N=1024); output is a result bitvector (n
+    # bits). Compute is the flat published scan cost (not batch-scaled).
+    c = bitweave_compute(bits, Layout.BP)
+    return _r(f"bitweave{bits}",
+              bp=lambda o, w, n: c, bs=lambda o, w, n: c,
+              in_bp=lambda w, n: 32 * n + (64 // bits) * n,
+              out_bp=lambda w, n: 2 * n,
+              batched=False)
+
+
+#: kernel name -> recipe; keys match `repro.core.microkernels.MICROKERNELS`.
+KERNEL_RECIPES: dict[str, KernelRecipe] = {
+    # --- arithmetic --------------------------------------------------------
+    "vector_add": _r(
+        "vector_add",
+        bp=lambda o, w, n: BP_ADD,
+        bs=lambda o, w, n: w * BS_ADD1,
+        in_bp=lambda w, n: 4 * n * w, out_bp=lambda w, n: 2 * n * w),
+    "vector_sub": _r(
+        "vector_sub",
+        bp=lambda o, w, n: BP_SUB,
+        bs=lambda o, w, n: w * BS_ADD1,
+        in_bp=lambda w, n: 4 * n * w, out_bp=lambda w, n: 2 * n * w),
+    # BP widens both operands to the 2w product width before compute
+    # (Table 5: load 128 rows @16b/N=1024); BS loads native-width operands
+    # and grows the product in place (load 64).
+    "multu": _r(
+        "multu",
+        bp=lambda o, w, n: w + 2,           # N-bit word multiply (Table 2)
+        bs=lambda o, w, n: w * w,           # shift-and-add: W adds of W bits
+        in_bp=lambda w, n: 8 * n * w, in_bs=lambda w, n: 4 * n * w,
+        out_bp=lambda w, n: 4 * n * w),
+    "multu_const": _r(
+        "multu_const",
+        bp=lambda o, w, n: w + 2,
+        bs=lambda o, w, n: w * w,
+        in_bp=lambda w, n: 8 * n * w, in_bs=lambda w, n: 4 * n * w,
+        out_bp=lambda w, n: 4 * n * w),
+    "divu": _r(
+        "divu",
+        # Restoring division: word datapath calibrated 2.5*w^2 (640 @16b);
+        # bit-serial per quotient bit a w-bit sub + 4-cycle restore MUX.
+        bp=lambda o, w, n: o.ceil_div(5 * w * w, 2),
+        bs=lambda o, w, n: 5 * w * w,
+        in_bp=lambda w, n: 4 * n * w, out_bp=lambda w, n: 2 * n * w),
+    "min": _r(
+        "min",
+        bp=lambda o, w, n: o.by_width(w, _MINMAX_BP_CALIB, w + 5),
+        bs=lambda o, w, n: 6 * w,  # sub (w) + MUX select (4w) + commit (w)
+        in_bp=lambda w, n: 4 * n * w, out_bp=lambda w, n: 2 * n * w),
+    "max": _r(
+        "max",
+        bp=lambda o, w, n: o.by_width(w, _MINMAX_BP_CALIB, w + 5),
+        bs=lambda o, w, n: 6 * w,
+        in_bp=lambda w, n: 4 * n * w, out_bp=lambda w, n: 2 * n * w),
+    # --- logical / bit-manipulation ---------------------------------------
+    # Tree reduction: readout is the final-stage partial-sum region
+    # (n*w/2 bits; Table 5 readout 16 rows @ N=1024).
+    "reduction": _r(
+        "reduction",
+        bp=lambda o, w, n: 2 * o.ceil_log2(n) - 1,
+        bs=lambda o, w, n: w,      # native serial column summation pipeline
+        in_bp=lambda w, n: 2 * n * w, out_bp=lambda w, n: n * w),
+    # BP D&C stages keep data + two shifted-mask operands resident
+    # (4*n*w load bits; Table 5 load 128 rows); BS reads data only.
+    "bitcount": _r(
+        "bitcount",
+        bp=lambda o, w, n: 6 * o.floor_log2(w) + 1,  # D&C popcount
+        bs=lambda o, w, n: 5 * w,                    # serial summation
+        in_bp=lambda w, n: 8 * n * w, in_bs=lambda w, n: 2 * n * w,
+        out_bp=lambda w, n: 2 * n * w, out_bs=lambda w, n: n * w),
+    "bitweave1": _bitweave_recipe(1),
+    "bitweave2": _bitweave_recipe(2),
+    "bitweave4": _bitweave_recipe(4),
+    # --- control / predicate ----------------------------------------------
+    "abs": _r(
+        "abs",
+        bp=lambda o, w, n: w + 2,  # sign broadcast + xor + sub-ish fixup
+        bs=lambda o, w, n: 3 * w,  # serialized conditional negate
+        in_bp=lambda w, n: 2 * n * w, out_bp=lambda w, n: 2 * n * w),
+    # BP holds cond/true/false words (3 operands). BS stores the condition
+    # as a packed half-width flag plane => 2.5 operand loads (Table 5: 80).
+    "if_then_else": _r(
+        "if_then_else",
+        bp=lambda o, w, n: 7,          # width-independent mask-0s variant
+        bs=lambda o, w, n: 3 * w + 1,  # cond sub + 2w masked-and + combine
+        in_bp=lambda w, n: 6 * n * w, in_bs=lambda w, n: 5 * n * w,
+        out_bp=lambda w, n: 2 * n * w),
+    "equal": _r(
+        "equal",
+        bp=lambda o, w, n: w + 6,      # XOR + OR-reduce tree + flag fixups
+        bs=lambda o, w, n: 2 * w + 1,  # serial XOR (w) + OR-reduce (w) + 1
+        in_bp=lambda w, n: 4 * n * w, out_bp=lambda w, n: 2 * n * w),
+    "ge_0": _r(
+        "ge_0",
+        bp=lambda o, w, n: w + 1,  # sign shift (w-1) + xor + incr
+        bs=lambda o, w, n: 1,      # read the sign-bit row
+        in_bp=lambda w, n: 2 * n * w, out_bp=lambda w, n: n * w),
+    # BS keeps a packed zero-test scratch plane => 1.5 operand loads
+    # (reconciles the inconsistent published row; DESIGN.md Sec. 8).
+    "gt_0": _r(
+        "gt_0",
+        bp=lambda o, w, n: 2 * w + 3,  # ge_0 (w+1) + nonzero test (w+2)
+        bs=lambda o, w, n: w + 1,      # sign bit + serial OR-reduce
+        in_bp=lambda w, n: 2 * n * w, in_bs=lambda w, n: 3 * n * w,
+        out_bp=lambda w, n: 2 * n * w, out_bs=lambda w, n: n * w),
+    # Published row (N=8192): load 512 / readout 512 in both modes -- the
+    # kernel streams data + zero-mask in, result + mask out (2x each way).
+    "relu": _r(
+        "relu",
+        bp=lambda o, w, n: w + 1,
+        bs=lambda o, w, n: w + 1,
+        in_bp=lambda w, n: 4 * n * w, out_bp=lambda w, n: 4 * n * w),
+}
+
+
+def eval_recipe(kernel, layout: Layout, ops=SCALAR_OPS, *, n, width,
+                total_columns, row_bandwidth_bits):
+    """Evaluate one kernel recipe -> (load, compute, readout) cycles.
+
+    `ops` selects the evaluation backend (SCALAR_OPS here, JnpOps in
+    `repro.sweep.vectorized`); `n`/`width`/`total_columns`/
+    `row_bandwidth_bits` may be python ints or broadcastable jnp arrays.
+    """
+    r = KERNEL_RECIPES[kernel] if isinstance(kernel, str) else kernel
+    layout = Layout(layout)
+    load = ops.ceil_div(r.in_half_bits[layout](width, n),
+                        2 * row_bandwidth_bits)
+    readout = ops.ceil_div(r.out_half_bits[layout](width, n),
+                           2 * row_bandwidth_bits)
+    comp = r.compute[layout](ops, width, n)
+    if r.batched:
+        # compute is capacity-parallel: all resident elements step together
+        elems = total_columns // width if layout is Layout.BP else total_columns
+        comp = comp * ops.maximum(1, ops.ceil_div(n, elems))
+    return load, comp, readout
+
+
+def _compute(kernel: str, layout: Layout, width: int, n: int = 1) -> int:
+    """Per-batch compute cycles of `kernel` via the shared recipe table."""
+    return KERNEL_RECIPES[kernel].compute[layout](SCALAR_OPS, width, n)
+
+
+# ---------------------------------------------------------------------------
+# Scalar primitive/kernel compute API (thin wrappers over the recipes)
+# ---------------------------------------------------------------------------
+
+def bp_mult(width: int) -> int:
+    """N-bit word multiply: N+2 cycles (Table 2)."""
+    return _compute("multu", Layout.BP, width)
+
+
+def bp_shift(k: int) -> int:
+    return k
+
+
+def bs_add(width: int) -> int:
+    """Ripple bit-serial add: 1 cycle per bit."""
+    return _compute("vector_add", Layout.BS, width)
+
+
+def bs_sub(width: int) -> int:
+    return _compute("vector_sub", Layout.BS, width)
+
+
+def bs_mult(width: int) -> int:
+    """Shift-and-add multiply: W partial adds of W bits each => W^2.
+    (Table 3: 1024 cycles @32b; Table 5: 256 @16b.)"""
+    return _compute("multu", Layout.BS, width)
+
+
+def bs_mux(width: int) -> int:
+    return BS_MUX1 * width
+
+
+def minmax_bp(width: int) -> int:
+    """Shift-mask variant: published 21 @16b / 36 @32b, fallback w+5."""
+    return _compute("min", Layout.BP, width)
+
+
+def minmax_bs(width: int) -> int:
+    """sub (w) + synthesized per-bit MUX select (4w) + conditional copy (w)."""
+    return _compute("min", Layout.BS, width)  # 96 @16b, 192 @32b (Tables 5/3)
+
+
+def div_bp(width: int) -> int:
+    """Restoring division, word datapath: calibrated 2.5*w^2 (640 @16b, T5)."""
+    return _compute("divu", Layout.BP, width)
+
+
+def div_bs(width: int) -> int:
+    """Restoring division, bit-serial: per quotient bit a w-bit sub + 4-cycle
+    restore MUX => 5*w^2 (1280 @16b, Table 5)."""
+    return _compute("divu", Layout.BS, width)
+
+
+def abs_bp(width: int) -> int:
+    """shift(w-1) sign broadcast + xor + sub-ish fixup: w+2 (18 @16b)."""
+    return _compute("abs", Layout.BP, width)
+
+
+def abs_bs(width: int) -> int:
+    """serialized conditional negate: 3w (48 @16b)."""
+    return _compute("abs", Layout.BS, width)
+
+
+def if_then_else_bp(width: int) -> int:
+    """Predicated select with word mask ops: 7 cycles at any width
+    (7 @16b Table 5; 7 @32b Table 3)."""
+    return _compute("if_then_else", Layout.BP, width)
+
+
+def if_then_else_bs(width: int) -> int:
+    """Condition (sub w) + 2w masked-and + 1 combine: 3w+1 (49 @16b, 97 @32b)."""
+    return _compute("if_then_else", Layout.BS, width)
+
+
+def equal_bp(width: int) -> int:
+    """XOR + OR-reduce tree + flag fixups: calibrated w+6 (22 @16b)."""
+    return _compute("equal", Layout.BP, width)
+
+
+def equal_bs(width: int) -> int:
+    """serial XOR (w) + serial OR-reduce (w) + flag (1): 2w+1 (33 @16b)."""
+    return _compute("equal", Layout.BS, width)
+
+
+def ge0_bp(width: int) -> int:
+    """sign shift (w-1) + xor + incr: w+1 (17 @16b)."""
+    return _compute("ge_0", Layout.BP, width)
+
+
+def ge0_bs(width: int) -> int:
+    """read the sign-bit row: 1 cycle."""
+    return _compute("ge_0", Layout.BS, width)
+
+
+def gt0_bp(width: int) -> int:
+    """ge_0 (w+1) + nonzero test (w+2): 2w+3 (35 @16b)."""
+    return _compute("gt_0", Layout.BP, width)
+
+
+def gt0_bs(width: int) -> int:
+    """sign bit + serial OR-reduce over bits: w+1 (17 @16b)."""
+    return _compute("gt_0", Layout.BS, width)
+
+
+def relu_k(width: int) -> int:
+    """ReLU mask-and: w+1 in both modes (17 @16b; published row shows equal
+    compute for BP and BS)."""
+    return _compute("relu", Layout.BP, width)
+
+
+def reduction_bp(n: int) -> int:
+    """Tree reduction over n elements: 2*ceil(log2 n) - 1 (19 @1024, T5)."""
+    return _compute("reduction", Layout.BP, 16, n=n)
+
+
+def reduction_bs(width: int) -> int:
+    """Native serial column summation pipeline: w cycles (16 @16b, T5)."""
+    return _compute("reduction", Layout.BS, width)
+
+
+def bitcount_bp(width: int) -> int:
+    """Divide-and-conquer popcount: 6*log2(w)+1 (25 @16b, T5)."""
+    return _compute("bitcount", Layout.BP, width)
+
+
+def bitcount_bs(width: int) -> int:
+    """Serial summation of bit rows: 5w (80 @16b, T5)."""
+    return _compute("bitcount", Layout.BS, width)
 
 
 # ---------------------------------------------------------------------------

@@ -81,118 +81,36 @@ class MicroKernel:
         }
 
 
-def _mk(layout: Layout, sys: SystemParams, *, n: int, width: int,
-        in_bits: float, out_bits: float, bp: int, bs: int) -> CycleCost:
-    load = sys.xfer_cycles(in_bits)
-    readout = sys.xfer_cycles(out_bits)
-    if layout is Layout.BP:
-        compute = bp * sys.bp_batches(n, width)
-    else:
-        compute = bs * sys.bs_batches(n)
-    return CycleCost(load, compute, readout)
-
-
-# --- arithmetic -------------------------------------------------------------
-
-def _vector_add(l, n, w, s):
-    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=n * w,
-               bp=cm.BP_ADD, bs=cm.bs_add(w))
-
-
-def _vector_sub(l, n, w, s):
-    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=n * w,
-               bp=cm.BP_SUB, bs=cm.bs_sub(w))
-
-
-def _multu(l, n, w, s):
-    # BP widens both operands to the 2w product width before compute
-    # (Table 5: load 128 rows @16b/N=1024); BS loads native-width operands
-    # and grows the product in place (load 64).
-    in_bits = 2 * n * 2 * w if l is Layout.BP else 2 * n * w
-    return _mk(l, s, n=n, width=w, in_bits=in_bits, out_bits=n * 2 * w,
-               bp=cm.bp_mult(w), bs=cm.bs_mult(w))
-
-
-def _divu(l, n, w, s):
-    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=n * w,
-               bp=cm.div_bp(w), bs=cm.div_bs(w))
-
-
-def _minmax(l, n, w, s):
-    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=n * w,
-               bp=cm.minmax_bp(w), bs=cm.minmax_bs(w))
-
-
-# --- logical / bit-manipulation ----------------------------------------------
-
-def _reduction(l, n, w, s):
-    # Tree reduction: readout is the final-stage partial-sum region
-    # (n*w/2 bits; Table 5 readout 16 rows @ N=1024).
-    return _mk(l, s, n=n, width=w, in_bits=n * w, out_bits=n * w / 2,
-               bp=cm.reduction_bp(n), bs=cm.reduction_bs(w))
-
-
-def _bitcount(l, n, w, s):
-    # BP D&C stages keep data + two shifted-mask operands resident
-    # (4*n*w load bits; Table 5 load 128 rows); BS reads data only.
-    in_bits = 4 * n * w if l is Layout.BP else n * w
-    out_bits = n * w if l is Layout.BP else n * w / 2
-    return _mk(l, s, n=n, width=w, in_bits=in_bits, out_bits=out_bits,
-               bp=cm.bitcount_bp(w), bs=cm.bitcount_bs(w))
-
-
-def _bitweave(bits: int):
-    def fn(l, n, w, s):  # noqa: ARG001 (w unused: code width is `bits`)
-        # Packed b-bit codes + (2/b) predicate-constant planes
-        # (load rows 96/64/48 for b=1/2/4 @ N=1024); output is a result
-        # bitvector (n bits).
-        in_bits = n * 16 * (1 + 2.0 / bits) / 1  # 16 = word container width
-        comp = cm.bitweave_compute(bits, l)
-        load = s.xfer_cycles(in_bits)
-        readout = s.xfer_cycles(n)
-        return CycleCost(load, comp, readout)
+def _recipe_cost(name: str):
+    """cost_fn factory: assemble load/compute/readout from the kernel's
+    declarative recipe (`cost_model.KERNEL_RECIPES`) -- the same recipe the
+    vectorized sweep path (`repro.sweep.vectorized`) evaluates under jit,
+    so the scalar and grid evaluations cannot drift apart."""
+    def fn(l, n, w, s):
+        load, comp, ro = cm.eval_recipe(
+            name, l, n=n, width=w, total_columns=s.total_columns,
+            row_bandwidth_bits=s.row_bandwidth_bits)
+        return CycleCost(load, comp, ro)
     return fn
 
 
-# --- control / predicate ------------------------------------------------------
-
-def _abs(l, n, w, s):
-    return _mk(l, s, n=n, width=w, in_bits=n * w, out_bits=n * w,
-               bp=cm.abs_bp(w), bs=cm.abs_bs(w))
-
-
-def _if_then_else(l, n, w, s):
-    # BP holds cond/true/false words (3 operands). BS stores the condition as
-    # a packed half-width flag plane => 2.5 operand loads (Table 5: 80 rows).
-    in_bits = 3 * n * w if l is Layout.BP else 2.5 * n * w
-    return _mk(l, s, n=n, width=w, in_bits=in_bits, out_bits=n * w,
-               bp=cm.if_then_else_bp(w), bs=cm.if_then_else_bs(w))
-
-
-def _equal(l, n, w, s):
-    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=n * w,
-               bp=cm.equal_bp(w), bs=cm.equal_bs(w))
+_vector_add = _recipe_cost("vector_add")
+_vector_sub = _recipe_cost("vector_sub")
+_multu = _recipe_cost("multu")
+_divu = _recipe_cost("divu")
+_minmax = _recipe_cost("min")        # min/max share one recipe shape
+_reduction = _recipe_cost("reduction")
+_bitcount = _recipe_cost("bitcount")
+_abs = _recipe_cost("abs")
+_if_then_else = _recipe_cost("if_then_else")
+_equal = _recipe_cost("equal")
+_ge0 = _recipe_cost("ge_0")
+_gt0 = _recipe_cost("gt_0")
+_relu = _recipe_cost("relu")
 
 
-def _ge0(l, n, w, s):
-    return _mk(l, s, n=n, width=w, in_bits=n * w, out_bits=n * w / 2,
-               bp=cm.ge0_bp(w), bs=cm.ge0_bs(w))
-
-
-def _gt0(l, n, w, s):
-    # BS keeps a packed zero-test scratch plane => 1.5 operand loads
-    # (reconciles the inconsistent published row; DESIGN.md Sec. 8).
-    in_bits = n * w if l is Layout.BP else 1.5 * n * w
-    out_bits = n * w if l is Layout.BP else n * w / 2
-    return _mk(l, s, n=n, width=w, in_bits=in_bits, out_bits=out_bits,
-               bp=cm.gt0_bp(w), bs=cm.gt0_bs(w))
-
-
-def _relu(l, n, w, s):
-    # Published row (N=8192): load 512 / readout 512 in both modes -- the
-    # kernel streams data + zero-mask in, result + mask out (2x each way).
-    return _mk(l, s, n=n, width=w, in_bits=2 * n * w, out_bits=2 * n * w,
-               bp=cm.relu_k(w), bs=cm.relu_k(w))
+def _bitweave(bits: int):
+    return _recipe_cost(f"bitweave{bits}")
 
 
 _FP = Footprint

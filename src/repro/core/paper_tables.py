@@ -266,6 +266,15 @@ def golden_snapshot() -> str:
     lines.append(f"aes_total BP={acc['BP']} BS={acc['BS']} "
                  f"hybrid={acc['hybrid']} "
                  f"speedup={acc['speedup']:.2f}")
+
+    # Machine-derived guidelines (repro.sweep): per-workload crossover
+    # widths at the paper geometry plus the planner hybrid-win set --
+    # pinned so guideline drift fails tier-1 (DESIGN.md Sec. 9).
+    from repro.sweep import guidelines, guidelines_lines
+    lines += ["", "[guidelines] workload crossover_width bs_win_widths "
+                  "(mk/* sweep @ paper geometry, widths 4/8/16/32; "
+                  "crossover = max width with BS total < BP total)"]
+    lines += guidelines_lines(guidelines(use_cache=False))
     return "\n".join(lines) + "\n"
 
 

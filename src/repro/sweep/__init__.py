@@ -1,0 +1,34 @@
+"""repro.sweep: vectorized BP/BS design-space characterization.
+
+Public surface (see README.md in this directory and DESIGN.md Sec. 9)::
+
+    from repro.sweep import (
+        Geometry, PAPER_GEOMETRY, iso_area_family,   # the geometry axis
+        SweepSpec, SweepResult, run_sweep,           # sweep execution
+        crossover_table, guidelines, hybrid_win_set, # frontier extraction
+    )
+
+    result = run_sweep(SweepSpec.default())
+    report = guidelines(result)
+
+CLI: ``python -m repro sweep`` / ``python -m repro guidelines``.
+"""
+from repro.sweep.frontier import (  # noqa: F401
+    bs_win_mask,
+    crossover_table,
+    geometry_profile,
+    guidelines,
+    guidelines_lines,
+    hybrid_win_set,
+)
+from repro.sweep.grid import (  # noqa: F401
+    Geometry,
+    ISO_AREA_ROWS,
+    PAPER_GEOMETRY,
+    SweepResult,
+    SweepSpec,
+    cache_stats,
+    default_cache_dir,
+    iso_area_family,
+    run_sweep,
+)

@@ -1,0 +1,231 @@
+"""Crossover extraction and machine-derived layout guidelines.
+
+Consumes a :class:`repro.sweep.grid.SweepResult` (the dense
+workload x layout x width x geometry surface) and reduces it to the
+paper's Sec.-7-style deliverables:
+
+* :func:`bs_win_mask` / :func:`crossover_table` -- where (and up to which
+  width) the bit-serial layout beats bit-parallel, per workload and
+  geometry.  The *crossover width* of a workload is the largest swept
+  width at which BS still wins (0 if it never does); ``prefix=True`` marks
+  the common down-closed pattern ("BS wins below W") the published
+  guidelines assume.
+* :func:`hybrid_win_set` -- Table-6 applications whose optimal 2-state
+  plan is genuinely hybrid (`PlannerBackend`; schedule switches layouts
+  and beats both statics).
+* :func:`guidelines` -- the full machine-derived report: crossover table
+  at the paper geometry, geometry sensitivity over the iso-area family,
+  row-overflow feasibility bounds, the hybrid-win set, and derived rule
+  strings.  ``python -m repro sweep`` / ``repro guidelines`` serialize it
+  to ``bench-artifacts/guidelines.json``; the ``[guidelines]`` section of
+  tests/golden/paper_tables.txt pins the crossover table and hybrid set
+  so guideline drift fails tier-1 loudly (regeneration: DESIGN.md Sec. 9).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.params import SystemParams, PAPER_SYSTEM
+from repro.sweep.grid import (
+    PAPER_GEOMETRY,
+    SweepResult,
+    SweepSpec,
+    run_sweep,
+)
+
+BP, BS = 0, 1  # layout axis order of SweepResult.breakdown
+
+
+def bs_win_mask(result: SweepResult) -> np.ndarray:
+    """(K, W, G) bool: BS total cycles strictly below BP's."""
+    t = result.totals
+    return t[:, BS] < t[:, BP]
+
+
+def _paper_geometry_index(result: SweepResult) -> int:
+    try:
+        return result.spec.geometries.index(PAPER_GEOMETRY)
+    except ValueError:
+        return 0
+
+
+def crossover_table(result: SweepResult,
+                    geometry_index: Optional[int] = None) -> dict:
+    """Per-workload crossover record at one geometry (default: paper).
+
+    ``{workload: {crossover_width, bs_win_widths, prefix,
+    bs_feasible_widths}}``; widths are the spec's swept values.
+    """
+    gi = _paper_geometry_index(result) if geometry_index is None \
+        else geometry_index
+    t = result.totals
+    wins = bs_win_mask(result)[:, :, gi]
+    ties = (t[:, BS] == t[:, BP])[:, :, gi]
+    widths = list(result.spec.widths)
+    out = {}
+    for k, name in enumerate(result.spec.workloads):
+        win_ws = [w for i, w in enumerate(widths) if wins[k, i]]
+        cw = max(win_ws, default=0)
+        out[name] = {
+            "crossover_width": cw,
+            "bs_win_widths": win_ws,
+            "tie_widths": [w for i, w in enumerate(widths) if ties[k, i]],
+            # down-closed ("BS wins below W") -- the published rule shape
+            "prefix": win_ws == [w for w in widths if w <= cw],
+            "bs_feasible_widths": [
+                w for i, w in enumerate(widths)
+                if result.bs_feasible[k, i, gi]],
+        }
+    return out
+
+
+def geometry_profile(result: SweepResult) -> list[dict]:
+    """Per-geometry aggregate: BS-win fraction and feasibility fractions
+    over the (workload x width) cells -- the iso-area sensitivity axis."""
+    wins = bs_win_mask(result)
+    out = []
+    for g, geo in enumerate(result.spec.geometries):
+        out.append({
+            "geometry": geo.label(),
+            "rows": geo.rows,
+            "arrays": geo.arrays,
+            "total_columns": geo.total_columns,
+            "bs_win_frac": float(wins[:, :, g].mean()),
+            "bs_feasible_frac": float(result.bs_feasible[:, :, g].mean()),
+            "bp_feasible_frac": float(result.bp_feasible[:, g].mean()),
+        })
+    return out
+
+
+def hybrid_win_set(sys: SystemParams = PAPER_SYSTEM) -> tuple[str, ...]:
+    """Table-6 applications whose optimal plan is hybrid AND strictly
+    beats the best static layout (PlannerBackend at `sys`)."""
+    from repro.workloads import characterize, workload_names
+
+    out = []
+    for app in workload_names("table6"):
+        s = characterize(app, backends=("planner",), sys=sys)["planner"] \
+            .summary
+        if s["is_hybrid"] and s["hybrid_cycles"] < min(s["bp_cycles"],
+                                                      s["bs_cycles"]):
+            out.append(app)
+    return tuple(out)
+
+
+def _derive_rules(result: SweepResult, cross: dict,
+                  hybrid: tuple[str, ...]) -> list[str]:
+    """Sec.-7-style guideline sentences, derived from the surfaces (never
+    hand-written -- regenerating the sweep regenerates these)."""
+    widths = list(result.spec.widths)
+    always = sorted(n for n, c in cross.items()
+                    if c["bs_win_widths"] == widths)
+    neutral = sorted(n for n, c in cross.items()
+                     if c["tie_widths"] == widths)
+    never = sorted(n for n, c in cross.items()
+                   if not c["bs_win_widths"] and n not in neutral)
+    below = {n: c["crossover_width"] for n, c in cross.items()
+             if c["bs_win_widths"] and c["bs_win_widths"] != widths
+             and c["prefix"]}
+    rules = []
+    if always:
+        rules.append(
+            "BS wins at every swept width for bit-centric/predicate "
+            "kernels: " + ", ".join(always) + ".")
+    if neutral:
+        rules.append(
+            "Layout-neutral at every swept width (identical totals): "
+            + ", ".join(neutral) + ".")
+    if below:
+        grouped: dict[int, list[str]] = {}
+        for n, w in sorted(below.items()):
+            grouped.setdefault(w, []).append(n)
+        for w in sorted(grouped):
+            rules.append(
+                f"BS wins only below/at width {w} for: "
+                + ", ".join(grouped[w]) + " (crossover to BP above).")
+    if never:
+        rules.append(
+            "BP wins at every swept width for arithmetic-heavy kernels: "
+            + ", ".join(never) + ".")
+    non_prefix = sorted(n for n, c in cross.items()
+                        if c["bs_win_widths"] and not c["prefix"])
+    if non_prefix:
+        rules.append(
+            "Non-monotone crossover (win set is not a width prefix) for: "
+            + ", ".join(non_prefix) + " -- check per-width data.")
+    # geometry sensitivity over the iso-area family
+    prof = geometry_profile(result)
+    wins = bs_win_mask(result)
+    flips = int(np.sum(wins.any(axis=2) != wins.all(axis=2)))
+    if flips:
+        rules.append(
+            f"{flips} (workload, width) cell(s) flip winner across the "
+            "iso-area family: capacity batching makes the BP/BS choice "
+            "geometry-dependent at these points.")
+    else:
+        rules.append(
+            "No (workload, width) cell flips winner across the iso-area "
+            "family at the Table-5 operating points: the crossover is set "
+            "by width and kernel class, not geometry, until capacity "
+            "batching engages.")
+    shallow = min(prof, key=lambda p: p["rows"])
+    deep = max(prof, key=lambda p: p["rows"])
+    rules.append(
+        f"Row overflow bounds BS: at {shallow['rows']} rows only "
+        f"{shallow['bs_feasible_frac']:.0%} of (workload, width) cells "
+        f"keep the vertical footprint resident, vs "
+        f"{deep['bs_feasible_frac']:.0%} at {deep['rows']} rows -- "
+        "iso-area trades that favour array count over depth shrink the "
+        "feasible BS region (Challenge 2/5).")
+    if hybrid:
+        rules.append(
+            "Phase-diverse applications where a transpose-aware hybrid "
+            "schedule beats both static layouts: "
+            + ", ".join(hybrid) + " (PlannerBackend 2-state DP).")
+    return rules
+
+
+def guidelines(result: Optional[SweepResult] = None, *,
+               spec: Optional[SweepSpec] = None,
+               sys: SystemParams = PAPER_SYSTEM,
+               use_cache: bool = False,
+               include_hybrid: bool = True) -> dict:
+    """The full machine-derived guidelines report (JSON-serializable)."""
+    if result is None:
+        result = run_sweep(spec or SweepSpec.default(),
+                           use_cache=use_cache)
+    gi = _paper_geometry_index(result)
+    cross = crossover_table(result, geometry_index=gi)
+    hybrid = hybrid_win_set(sys) if include_hybrid else ()
+    return {
+        "spec": result.spec.to_dict(),
+        "paper_geometry": PAPER_GEOMETRY.to_dict(),
+        # the geometry the crossover table was ACTUALLY computed at --
+        # equals paper_geometry only when the sweep includes it
+        "crossover_geometry": result.spec.geometries[gi].to_dict(),
+        "crossover_at_paper_geometry":
+            result.spec.geometries[gi] == PAPER_GEOMETRY,
+        "crossover": cross,
+        "hybrid_recommended": list(hybrid),
+        "geometry_profile": geometry_profile(result),
+        "rules": _derive_rules(result, cross, hybrid),
+        "sweep_summary": result.summary(),
+    }
+
+
+def guidelines_lines(g: dict) -> list[str]:
+    """The pinned text rendering (golden snapshot ``[guidelines]`` body).
+
+    One line per workload -- ``name crossover_width bs_win_widths`` --
+    plus the hybrid-recommended set; everything else in the report
+    (rules, geometry profile) derives from these surfaces."""
+    lines = []
+    for name in sorted(g["crossover"]):
+        c = g["crossover"][name]
+        ws = "/".join(str(w) for w in c["bs_win_widths"]) or "-"
+        lines.append(f"{name} {c['crossover_width']} {ws}")
+    lines.append("hybrid_recommended "
+                 + (" ".join(g["hybrid_recommended"]) or "-"))
+    return lines

@@ -1,0 +1,338 @@
+"""Declarative design-space sweeps over (workload x width x geometry).
+
+The paper's guidelines are crossover claims over design parameters, but a
+point cost model can only answer one ``(workload, layout, width)`` query at
+the fixed `PAPER_SYSTEM` geometry.  This module turns the model into a
+characterization engine:
+
+* :class:`Geometry` -- one CSA system operating point (rows / cols /
+  arrays / row bus width), convertible to/from `SystemParams`.
+* :func:`iso_area_family` -- the paper-faithful geometry axis: hold the
+  total bit capacity ``arrays * rows * cols`` constant while trading array
+  depth (rows) for array count, cols and bus width fixed.  Deeper arrays
+  concentrate capacity into fewer columns (fewer 1-bit BS lanes, more
+  capacity batches); shallower arrays multiply columns but starve the BS
+  vertical footprint (row overflow, Challenge 2/5).
+* :class:`SweepSpec` -- declarative sweep description (workloads x widths
+  x geometries), content-hashable for the disk cache.
+* :func:`run_sweep` -- chunked/jitted execution via
+  `repro.sweep.vectorized` (one compiled call per chunk, every kernel and
+  layout batched inside it), with a content-hash cache under
+  ``bench-artifacts/sweep-cache/`` and optional multi-device sharding via
+  `repro.dist` (pass ``mesh=``).
+
+Sweepable workloads are the single-kernel ``mk/*`` registry entries (the
+Table-5 suite); multi-op applications keep their planner/executor routes
+(`repro.workloads`), which `repro.sweep.frontier` combines with the grid
+for the hybrid-win analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import inspect
+import json
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.params import ArrayParams, SystemParams, PAPER_SYSTEM
+
+#: default rows options for the iso-area family: the paper point (128) plus
+#: power-of-two trades in both directions. rows=8..16 starve the BS
+#: vertical footprint; rows >= 1024 shrink total columns enough that
+#: capacity batching engages at the Table-5 operating points.
+ISO_AREA_ROWS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
+
+
+def _artifact_dir() -> str:
+    return os.environ.get("REPRO_BENCH_ARTIFACT_DIR", "bench-artifacts")
+
+
+def default_cache_dir() -> str:
+    return os.path.join(_artifact_dir(), "sweep-cache")
+
+
+# ---------------------------------------------------------------------------
+# Geometry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    """One CSA system geometry (the sweepable subset of `SystemParams`)."""
+
+    rows: int
+    cols: int
+    arrays: int
+    row_bandwidth_bits: int = 512
+
+    @property
+    def capacity_bits(self) -> int:
+        return self.rows * self.cols * self.arrays
+
+    @property
+    def total_columns(self) -> int:
+        return self.cols * self.arrays
+
+    def system(self) -> SystemParams:
+        return SystemParams(
+            array=ArrayParams(rows=self.rows, cols=self.cols),
+            num_arrays=self.arrays,
+            row_bandwidth_bits=self.row_bandwidth_bits)
+
+    @classmethod
+    def from_system(cls, sys: SystemParams) -> "Geometry":
+        return cls(rows=sys.array.rows, cols=sys.array.cols,
+                   arrays=sys.num_arrays,
+                   row_bandwidth_bits=sys.row_bandwidth_bits)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def label(self) -> str:
+        return (f"{self.rows}x{self.cols}x{self.arrays}"
+                f"@{self.row_bandwidth_bits}")
+
+
+PAPER_GEOMETRY = Geometry.from_system(PAPER_SYSTEM)
+
+
+def iso_area_family(base: SystemParams = PAPER_SYSTEM,
+                    rows_options=ISO_AREA_ROWS) -> tuple[Geometry, ...]:
+    """Geometries with the base system's exact bit capacity, trading rows
+    for arrays (cols and bus width fixed). Options that do not divide the
+    vertical capacity evenly are skipped."""
+    vertical = base.array.rows * base.num_arrays  # rows * arrays, constant
+    fam = []
+    for r in rows_options:
+        if vertical % r:
+            continue
+        fam.append(Geometry(rows=r, cols=base.array.cols,
+                            arrays=vertical // r,
+                            row_bandwidth_bits=base.row_bandwidth_bits))
+    return tuple(fam)
+
+
+# ---------------------------------------------------------------------------
+# SweepSpec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Declarative (workloads x widths x geometries) sweep description."""
+
+    workloads: tuple[str, ...]
+    widths: tuple[int, ...] = (4, 8, 16, 32)
+    geometries: tuple[Geometry, ...] = dataclasses.field(
+        default_factory=iso_area_family)
+    #: override every workload's registry element count (None = registry
+    #: operating point, Table-5 calibration sizes)
+    n_override: Optional[int] = None
+    #: geometries per jitted call (grid chunking; the default family fits
+    #: one chunk -- raise for very long custom geometry axes)
+    chunk: int = 64
+
+    @classmethod
+    def default(cls, workloads=None, widths=(4, 8, 16, 32),
+                geometries=None, n_override=None) -> "SweepSpec":
+        """All ``mk/*`` workloads over the iso-area family."""
+        from repro.workloads.registry import workload_names
+
+        return cls(
+            workloads=tuple(workloads or workload_names("table5")),
+            widths=tuple(widths),
+            geometries=tuple(geometries or iso_area_family()),
+            n_override=n_override)
+
+    def to_dict(self) -> dict:
+        return {
+            "workloads": list(self.workloads),
+            "widths": list(self.widths),
+            "geometries": [g.to_dict() for g in self.geometries],
+            "n_override": self.n_override,
+        }
+
+    def content_hash(self) -> str:
+        """Cache key: the spec content plus a model-source fingerprint, so
+        edits to the cost recipes or the vectorized evaluator invalidate
+        cached sweeps automatically."""
+        blob = json.dumps(self.to_dict(), sort_keys=True) \
+            + _model_fingerprint()
+        return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+def _model_fingerprint() -> str:
+    from repro.core import cost_model
+    from repro.sweep import vectorized
+
+    src = inspect.getsource(cost_model) + inspect.getsource(vectorized)
+    return hashlib.sha256(src.encode()).hexdigest()[:16]
+
+
+def _kernel_specs(spec: SweepSpec) -> list[tuple[str, int, int]]:
+    """Resolve spec workloads -> [(kernel, n, live_words)]; only
+    single-kernel-op (mk/*) workloads are vectorizable."""
+    from repro.core.microkernels import MICROKERNELS
+    from repro.workloads.registry import get_workload
+
+    out = []
+    for name in spec.workloads:
+        w = get_workload(name)
+        if len(w.ops) != 1 or w.ops[0].kind != "kernel":
+            raise ValueError(
+                f"sweep supports single-kernel (mk/*) workloads; "
+                f"{name!r} has {len(w.ops)} op(s) of kind(s) "
+                f"{sorted({op.kind for op in w.ops})}")
+        op = w.ops[0]
+        n = spec.n_override or op.n
+        out.append((op.kernel, n, MICROKERNELS[op.kernel].live_words))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SweepResult
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepResult:
+    """Dense sweep output plus feasibility masks and cache provenance.
+
+    ``breakdown[k, l, w, g, c]``: workload k, layout l (BP=0/BS=1), width
+    index w, geometry index g, component c (load/compute/readout), int64.
+    """
+
+    spec: SweepSpec
+    breakdown: np.ndarray    # (K, 2, W, G, 3) int64
+    bs_feasible: np.ndarray  # (K, W, G) bool -- vertical footprint fits
+    bp_feasible: np.ndarray  # (K, G) bool -- one row per live word fits
+    cache: dict = dataclasses.field(default_factory=dict)
+    elapsed_s: float = 0.0
+
+    @property
+    def totals(self) -> np.ndarray:
+        """(K, 2, W, G) total cycles."""
+        return self.breakdown.sum(axis=-1)
+
+    def workload_index(self, name: str) -> int:
+        return self.spec.workloads.index(name)
+
+    def geometry_index(self, geometry: Geometry) -> int:
+        return self.spec.geometries.index(geometry)
+
+    def summary(self) -> dict:
+        k, _, w, g, _ = self.breakdown.shape
+        return {
+            "workloads": k, "widths": w, "geometries": g,
+            "grid_points": k * 2 * w * g,
+            "bs_feasible_frac": float(self.bs_feasible.mean()),
+            "bp_feasible_frac": float(self.bp_feasible.mean()),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+def _evaluate(spec: SweepSpec, mesh=None) -> tuple[np.ndarray, np.ndarray,
+                                                   np.ndarray]:
+    from repro.sweep import vectorized as V
+
+    specs = _kernel_specs(spec)
+    kernel_ns = tuple((k, n) for k, n, _ in specs)
+    live_words = np.array([lw for _, _, lw in specs], np.int32)
+    widths = np.asarray(spec.widths, np.int32)
+    geo = spec.geometries
+    rows = np.array([g.rows for g in geo], np.int32)
+    cols = np.array([g.cols for g in geo], np.int32)
+    arrays = np.array([g.arrays for g in geo], np.int32)
+    bw = np.array([g.row_bandwidth_bits for g in geo], np.int32)
+
+    # chunk the geometry axis; pad the tail chunk so every call shares one
+    # compiled shape
+    G = len(geo)
+    c = max(1, min(spec.chunk, G))
+    if mesh is not None:
+        import jax
+        from repro.dist.sharding import use_mesh
+
+        fn = jax.jit(V.make_grid_fn(kernel_ns, sharded=True))
+        run = lambda *a: _run_sharded(fn, mesh, use_mesh, *a)
+    else:
+        run = lambda *a: np.asarray(V.eval_grid(kernel_ns, *a))
+    parts = []
+    for i in range(0, G, c):
+        sl = slice(i, i + c)
+        chunk = [x[sl] for x in (rows, cols, arrays, bw)]
+        pad = c - chunk[0].shape[0]
+        if pad:
+            chunk = [np.concatenate([x, np.repeat(x[-1:], pad)])
+                     for x in chunk]
+        out = run(widths, *chunk)
+        if pad:
+            out = out[:, :, :, :c - pad]
+        parts.append(out)
+    breakdown = np.concatenate(parts, axis=3).astype(np.int64)
+
+    bs_ok, bp_ok = V.feasible_masks(live_words, widths, rows)
+    return breakdown, np.asarray(bs_ok), np.asarray(bp_ok)
+
+
+def _run_sharded(fn, mesh, use_mesh, widths, rows, cols, arrays, bw):
+    import jax.numpy as jnp
+
+    with use_mesh(mesh):
+        to = lambda x: jnp.asarray(x, jnp.int32)
+        return np.asarray(fn(to(widths), to(rows), to(cols), to(arrays),
+                             to(bw)))
+
+
+def run_sweep(spec: SweepSpec, *, cache_dir: Optional[str] = None,
+              use_cache: bool = True, mesh=None) -> SweepResult:
+    """Execute (or load from cache) a sweep.
+
+    The cache key hashes the spec content AND the cost-model/vectorizer
+    sources, so model edits never serve stale surfaces.  ``mesh`` shards
+    the geometry axis over `repro.dist` data axes (results identical).
+    """
+    cache_dir = default_cache_dir() if cache_dir is None else cache_dir
+    key = spec.content_hash()
+    npz_path = os.path.join(cache_dir, f"{key}.npz")
+    meta_path = os.path.join(cache_dir, f"{key}.json")
+    cache_info = {"hit": False, "key": key, "path": npz_path,
+                  "enabled": bool(use_cache)}
+
+    if use_cache and os.path.exists(npz_path):
+        with np.load(npz_path) as z:
+            arrs = {k: z[k] for k in
+                    ("breakdown", "bs_feasible", "bp_feasible")}
+        cache_info["hit"] = True
+        return SweepResult(spec=spec, cache=cache_info, **arrs)
+
+    t0 = time.perf_counter()
+    breakdown, bs_ok, bp_ok = _evaluate(spec, mesh=mesh)
+    elapsed = time.perf_counter() - t0
+
+    if use_cache:
+        os.makedirs(cache_dir, exist_ok=True)
+        np.savez_compressed(npz_path, breakdown=breakdown,
+                            bs_feasible=bs_ok, bp_feasible=bp_ok)
+        with open(meta_path, "w") as f:
+            json.dump({"spec": spec.to_dict(), "key": key,
+                       "fingerprint": _model_fingerprint(),
+                       "elapsed_s": elapsed}, f, indent=1, sort_keys=True)
+    return SweepResult(spec=spec, breakdown=breakdown, bs_feasible=bs_ok,
+                       bp_feasible=bp_ok, cache=cache_info,
+                       elapsed_s=elapsed)
+
+
+def cache_stats(cache_dir: Optional[str] = None) -> dict:
+    """Entry count / byte size of the sweep cache (CI artifact)."""
+    cache_dir = default_cache_dir() if cache_dir is None else cache_dir
+    if not os.path.isdir(cache_dir):
+        return {"dir": cache_dir, "entries": 0, "bytes": 0}
+    paths = [os.path.join(cache_dir, p) for p in os.listdir(cache_dir)
+             if p.endswith(".npz")]
+    return {"dir": cache_dir, "entries": len(paths),
+            "bytes": sum(os.path.getsize(p) for p in paths)}

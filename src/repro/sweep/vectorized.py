@@ -1,0 +1,250 @@
+"""jnp-broadcastable evaluation of the Table-5 kernel cost recipes.
+
+`repro.core.cost_model.KERNEL_RECIPES` describes each kernel once against a
+tiny numeric namespace; this module provides the jnp instance of that
+namespace (:class:`JnpOps`) plus jitted evaluators, so a whole
+``(kernel x layout x width x geometry)`` grid costs ONE compiled call
+instead of thousands of python-scalar evaluations:
+
+* :func:`kernel_cost_vec` -- broadcastable (load, compute, readout) for one
+  kernel/layout over arrays of ``width`` / ``cols`` / ``arrays`` /
+  ``row_bandwidth_bits``.
+* :func:`eval_grid` -- the sweep engine's workhorse: every requested kernel
+  in both layouts over a ``widths x geometries`` grid, returned as an
+  int32 array of shape ``(K, 2, W, G, 3)`` (layout axis BP=0/BS=1; last
+  axis load/compute/readout).  Jitted once per kernel set.
+* :func:`eval_points` -- one operating point per kernel (the
+  ``AnalyticBackend.estimate_many`` fast path): shape ``(K, 2, 3)``.
+* :func:`bs_rows_required_vec` / :func:`feasible_masks` -- the
+  row-overflow side conditions (Challenge 2/5) as broadcastable arrays.
+
+Bit-for-bit contract: for every recipe and every integer operating point,
+these evaluations equal the scalar `cost_model` / `microkernels` path
+exactly (tests/test_sweep.py exhaustive suite + tests/
+test_sweep_properties.py property suite).  Keep :class:`JnpOps` integral --
+no floats -- so the contract survives any grid size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model as cm
+from repro.core.cost_model import Layout
+
+import numpy as np
+
+LAYOUTS = (Layout.BP, Layout.BS)  # fixed layout-axis order of all outputs
+
+_INT32_MAX = 2**31 - 1
+
+
+def _check_int32_range(n, width, cols, arrays) -> None:
+    """Reject operating points whose cycle terms could wrap int32.
+
+    The bit-for-bit contract is meaningless if the vectorized path wraps
+    where the scalar path does not, so the largest movement term
+    (8*n*width half-bits) and the largest compute term (div_bs = 5*w^2
+    per batch, times BP capacity batches) are bounded conservatively.
+    Inputs are concrete at every public entry point; inside a jit trace
+    they are tracers and the check is a no-op (the entry point already
+    ran it).
+    """
+    try:
+        n_max = int(np.max(n))
+        w_max = int(np.max(width))
+        tc_min = int(np.min(np.asarray(cols) * np.asarray(arrays)))
+    except (jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return
+    move = 8 * n_max * w_max
+    lanes = max(1, tc_min // w_max)
+    comp = 5 * w_max * w_max * max(1, -(-n_max // lanes))
+    if max(move, comp) > _INT32_MAX:
+        raise ValueError(
+            f"operating point too large for the int32 vectorized path "
+            f"(n={n_max}, width={w_max}, total_columns={tc_min}: worst "
+            f"term {max(move, comp)} > {_INT32_MAX}); use the scalar "
+            "microkernels.kernel_cost path for this point")
+
+
+class JnpOps:
+    """The jnp instance of the recipe numeric namespace (all-integer)."""
+
+    @staticmethod
+    def ceil_div(a, b):
+        # jnp floor-division rounds toward -inf (numpy semantics), so the
+        # classic sign trick is exact for the non-negative operands here.
+        return -((-a) // b)
+
+    @staticmethod
+    def maximum(a, b):
+        return jnp.maximum(a, b)
+
+    @staticmethod
+    def where(cond, a, b):
+        return jnp.where(cond, a, b)
+
+    @staticmethod
+    def floor_log2(x):
+        """Exact integer floor(log2(x)) for x >= 1 (no float log)."""
+        x = jnp.asarray(x, jnp.int32)
+        r = jnp.zeros_like(x)
+        for k in (16, 8, 4, 2, 1):
+            m = x >= (1 << k)
+            r = r + jnp.where(m, k, 0)
+            x = jnp.where(m, x >> k, x)
+        return r
+
+    @staticmethod
+    def ceil_log2(x):
+        """ceil(log2(max(2, x))), exact (mirrors ScalarOps.ceil_log2)."""
+        x = jnp.maximum(jnp.asarray(x, jnp.int32), 2)
+        return JnpOps.floor_log2(x - 1) + 1
+
+    @staticmethod
+    def by_width(width, table, fallback):
+        out = fallback + jnp.zeros_like(jnp.asarray(width, jnp.int32))
+        for k in sorted(table):
+            out = jnp.where(width == k, table[k], out)
+        return out
+
+
+JNP_OPS = JnpOps()
+
+
+def kernel_cost_vec(kernel: str, layout: Layout, *, n, width, cols, arrays,
+                    row_bandwidth_bits=512):
+    """Broadcast (load, compute, readout) int32 arrays for one kernel.
+
+    Every argument may be a python int or a broadcastable integer array;
+    the result shape is their common broadcast shape.  Equal bit-for-bit
+    to ``microkernels.kernel_cost`` at every integer point.
+    """
+    _check_int32_range(n, width, cols, arrays)
+    width = jnp.asarray(width, jnp.int32)
+    tc = jnp.asarray(cols, jnp.int32) * jnp.asarray(arrays, jnp.int32)
+    load, comp, ro = cm.eval_recipe(
+        kernel, layout, JNP_OPS, n=n, width=width, total_columns=tc,
+        row_bandwidth_bits=jnp.asarray(row_bandwidth_bits, jnp.int32))
+    # width-independent terms (bitweave, BP ite) collapse to scalars --
+    # broadcast everything to the full requested grid shape
+    shape = jnp.broadcast_shapes(jnp.shape(load), jnp.shape(comp),
+                                 jnp.shape(ro), width.shape, tc.shape)
+    return tuple(jnp.broadcast_to(jnp.asarray(x, jnp.int32), shape)
+                 for x in (load, comp, ro))
+
+
+# ---------------------------------------------------------------------------
+# Grid evaluation (the sweep engine's one-jitted-call path)
+# ---------------------------------------------------------------------------
+
+def make_grid_fn(kernel_ns: tuple, sharded: bool = False):
+    """Build the (un-jitted) grid evaluator for a static kernel set.
+
+    ``kernel_ns`` is a tuple of ``(kernel_name, n)`` pairs.  The returned
+    function maps ``(widths (W,), rows (G,), cols (G,), arrays (G,),
+    row_bw (G,))`` to an int32 array ``(K, 2, W, G, 3)``.  With
+    ``sharded=True`` the geometry axis is constrained onto the ambient
+    `repro.dist` mesh data axes (a no-op off-mesh), so multi-device hosts
+    partition the grid.
+    """
+    def fn(widths, rows, cols, arrays, row_bw):
+        del rows  # geometry rows gate feasibility, not cycle cost
+        if sharded:
+            from repro.dist.sharding import shard
+            cols, arrays, row_bw = (shard(x, "batch")
+                                    for x in (cols, arrays, row_bw))
+        w = widths[:, None]                      # (W, 1) vs geometry (G,)
+        shape = (widths.shape[0], cols.shape[0])
+        per_kernel = []
+        for name, n in kernel_ns:
+            per_layout = []
+            for lay in LAYOUTS:
+                l, c, r = kernel_cost_vec(
+                    name, lay, n=n, width=w, cols=cols, arrays=arrays,
+                    row_bandwidth_bits=row_bw)
+                per_layout.append(jnp.stack(
+                    [jnp.broadcast_to(x, shape) for x in (l, c, r)],
+                    axis=-1))
+            per_kernel.append(jnp.stack(per_layout))
+        return jnp.stack(per_kernel)
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_grid_fn(kernel_ns: tuple):
+    return jax.jit(make_grid_fn(kernel_ns, sharded=False))
+
+
+def eval_grid(kernel_ns, widths, rows, cols, arrays, row_bw):
+    """One jitted call: every (kernel, n) x layout x width x geometry.
+
+    Returns int32 ``(K, 2, W, G, 3)``; compiled once per (kernel set,
+    grid shape).
+    """
+    for _, n in kernel_ns:
+        _check_int32_range(n, widths, cols, arrays)
+    fn = _jitted_grid_fn(tuple(kernel_ns))
+    to = lambda x: jnp.asarray(x, jnp.int32)
+    return fn(to(widths), to(rows), to(cols), to(arrays), to(row_bw))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_points_fn(kernel_nws: tuple):
+    """kernel_nws: tuple of (kernel_name, n, width) -- all static."""
+    def fn(cols, arrays, row_bw):
+        out = []
+        for name, n, w in kernel_nws:
+            per_layout = []
+            for lay in LAYOUTS:
+                l, c, r = kernel_cost_vec(
+                    name, lay, n=n, width=w, cols=cols, arrays=arrays,
+                    row_bandwidth_bits=row_bw)
+                per_layout.append(jnp.stack([
+                    jnp.broadcast_to(x, ()) for x in (l, c, r)]))
+            out.append(jnp.stack(per_layout))
+        return jnp.stack(out)
+    return jax.jit(fn)
+
+
+def eval_points(kernel_nws, cols: int, arrays: int, row_bw: int):
+    """Batched per-kernel operating points -> int32 ``(K, 2, 3)``.
+
+    ``kernel_nws`` is a tuple of ``(kernel, n, width)`` triples; geometry
+    is one system (scalars).  This is the ``estimate_many`` fast path.
+    """
+    for _, n, w in kernel_nws:
+        _check_int32_range(n, w, cols, arrays)
+    fn = _jitted_points_fn(tuple(kernel_nws))
+    to = lambda x: jnp.asarray(x, jnp.int32)
+    return fn(to(cols), to(arrays), to(row_bw))
+
+
+# ---------------------------------------------------------------------------
+# Row-overflow feasibility (Challenge 2/5 side conditions)
+# ---------------------------------------------------------------------------
+
+def bs_rows_required_vec(live_words, width, carry_rows: int = 1):
+    """Vertical rows to keep `live_words` W-bit variables resident in a BS
+    column (broadcastable mirror of ``SystemParams.bs_rows_required``)."""
+    return (jnp.asarray(live_words, jnp.int32)
+            * jnp.asarray(width, jnp.int32) + carry_rows)
+
+
+def feasible_masks(live_words, widths, rows):
+    """Row-overflow masks over a (kernel, width, geometry) grid.
+
+    ``live_words (K,)``, ``widths (W,)``, ``rows (G,)`` ->
+    ``(bs_feasible (K, W, G), bp_feasible (K, G))``: BS needs
+    ``live_words * width + 1`` vertical rows, BP one row per live word.
+    """
+    lw = jnp.asarray(live_words, jnp.int32)
+    widths = jnp.asarray(widths, jnp.int32)
+    rows = jnp.asarray(rows, jnp.int32)
+    bs = (bs_rows_required_vec(lw[:, None, None], widths[None, :, None])
+          <= rows[None, None, :])
+    bp = lw[:, None] <= rows[None, :]
+    return bs, bp

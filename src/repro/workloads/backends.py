@@ -70,7 +70,13 @@ class Report:
 
 @runtime_checkable
 class Backend(Protocol):
-    """The protocol all evaluation surfaces implement."""
+    """The protocol all evaluation surfaces implement.
+
+    `sys` is explicit everywhere: backends never silently assume
+    `PAPER_SYSTEM` beyond the default argument, so sweeps can re-cost the
+    same workload under any geometry (tests/test_sweep.py pins that a
+    non-default geometry actually changes reported cycles).
+    """
 
     name: str
 
@@ -82,18 +88,75 @@ class Backend(Protocol):
                  sys: SystemParams = PAPER_SYSTEM) -> Report:
         ...
 
+    def estimate_many(self, workloads,
+                      sys: SystemParams = PAPER_SYSTEM) -> list[Report]:
+        """Batched estimates (one geometry, many workloads)."""
+        ...
+
+
+class _SequentialEstimateMany:
+    """Default `estimate_many`: sequential `estimate` calls.
+
+    Backends with a vectorizable cost surface override this (the analytic
+    backend batches single-kernel workloads into one jitted evaluation via
+    `repro.sweep.vectorized`); the DP/replay/wall-clock backends keep the
+    loop -- their per-workload state is inherently sequential.
+    """
+
+    def estimate_many(self, workloads,
+                      sys: SystemParams = PAPER_SYSTEM) -> list[Report]:
+        return [self.estimate(w, sys) for w in workloads]
+
 
 # ---------------------------------------------------------------------------
 # Analytic
 # ---------------------------------------------------------------------------
 
-class AnalyticBackend:
+class AnalyticBackend(_SequentialEstimateMany):
     """Closed-form paper cost model: per-op CycleCost in both layouts."""
 
     name = "analytic"
 
     def supports(self, workload: Workload) -> bool:
         return True
+
+    def estimate_many(self, workloads,
+                      sys: SystemParams = PAPER_SYSTEM) -> list[Report]:
+        """One jitted batched evaluation when every workload is a single
+        Table-5 kernel op (the ``mk/*`` registry shape); bit-for-bit equal
+        to the scalar `estimate` loop (pinned by tests/test_sweep.py).
+        Mixed-op workloads fall back to the sequential default."""
+        workloads = list(workloads)
+        if not workloads or not all(
+                len(w.ops) == 1 and w.ops[0].kind == "kernel"
+                for w in workloads):
+            return super().estimate_many(workloads, sys)
+        from repro.sweep.vectorized import eval_points
+
+        triples = tuple((w.ops[0].kernel, w.ops[0].n, w.ops[0].width)
+                        for w in workloads)
+        try:
+            table = eval_points(triples, cols=sys.array.cols,
+                                arrays=sys.num_arrays,
+                                row_bw=sys.row_bandwidth_bits)
+        except ValueError:
+            # operating point exceeds the int32 vectorized range --
+            # the python-int scalar path has no such limit
+            return super().estimate_many(workloads, sys)
+        out = []
+        for w, cell in zip(workloads, table):
+            op = w.ops[0]
+            bd = {lay.value: tuple(int(x) for x in cell[i])
+                  for i, lay in enumerate((Layout.BP, Layout.BS))}
+            bp = sum(bd["BP"])
+            bs = sum(bd["BS"])
+            out.append(Report(
+                workload=w.name, backend=self.name,
+                ops=(OpReport(op=op.name, kind=op.kind, bp_cycles=bp,
+                              bs_cycles=bs, breakdown=bd),),
+                summary={"bp_cycles": bp, "bs_cycles": bs,
+                         "bs_over_bp": bs / bp if bp else float("inf")}))
+        return out
 
     def estimate(self, workload: Workload,
                  sys: SystemParams = PAPER_SYSTEM) -> Report:
@@ -121,7 +184,7 @@ class AnalyticBackend:
 # Planner (hybrid DP)
 # ---------------------------------------------------------------------------
 
-class PlannerBackend:
+class PlannerBackend(_SequentialEstimateMany):
     """Lower to planner phases, run the 2-state hybrid DP."""
 
     name = "planner"
@@ -164,7 +227,7 @@ class PlannerBackend:
 # Executor (micro-op programs on the simulated array)
 # ---------------------------------------------------------------------------
 
-class ExecutorBackend:
+class ExecutorBackend(_SequentialEstimateMany):
     """Executed micro-op cycle counts (``repro.pim.programs``).
 
     Coverage: ``kernel`` ops with a builder in ``programs.BUILDERS`` run
@@ -261,7 +324,7 @@ class ExecutorBackend:
 # Pallas (measured wall-clock of the TPU-analogue kernels)
 # ---------------------------------------------------------------------------
 
-class PallasBackend:
+class PallasBackend(_SequentialEstimateMany):
     """Dispatch ``kernels.ops`` matmuls on a representative tile per
     matmul/conv op and measure wall-clock for both layouts (BP int8
     kernel vs BS bitplane kernel at the op's weight precision, capped at

@@ -1,0 +1,134 @@
+"""CLI subprocess tests for ``python -m repro`` (ISSUE 4 satellite).
+
+Exit codes, artifact JSON schemas, geometry threading, and the sweep
+cache-hit behaviour on a second invocation -- all through real
+subprocesses, so argument parsing and artifact writing are exercised the
+way CI's bench-smoke job runs them.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).parent.parent / "src")
+
+
+def run_cli(*args, artifact_dir=None, cwd=None):
+    env = {"PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu",
+           "PATH": os.environ.get("PATH", "/usr/bin")}
+    if artifact_dir is not None:
+        env["REPRO_BENCH_ARTIFACT_DIR"] = str(artifact_dir)
+    return subprocess.run([sys.executable, "-m", "repro", *args],
+                          capture_output=True, text=True, env=env,
+                          cwd=cwd)
+
+
+def test_list_exits_zero_and_names_everything():
+    proc = run_cli("list")
+    assert proc.returncode == 0
+    for needle in ("mk/vector_add", "aes", "arch/tinyllama_1_1b",
+                   "# backends", "analytic", "planner"):
+        assert needle in proc.stdout, needle
+
+
+def test_characterize_quick_writes_schema_valid_artifact(tmp_path):
+    proc = run_cli("characterize", "--quick", "mk/vector_add", "aes",
+                   artifact_dir=tmp_path)
+    assert proc.returncode == 0, proc.stderr
+    art = json.loads((tmp_path / "characterize.json").read_text())
+    assert set(art) == {"mk/vector_add", "aes"}
+    for summaries in art.values():
+        assert set(summaries) >= {"analytic", "planner", "executor"}
+        for s in summaries.values():
+            assert isinstance(s.get("bp_cycles"), int)
+            assert isinstance(s.get("bs_cycles"), int)
+
+
+def test_characterize_geometry_changes_reported_cycles():
+    base = run_cli("characterize", "mk/multu", "--backends", "analytic")
+    small = run_cli("characterize", "mk/multu", "--backends", "analytic",
+                    "--geometry", "128x512x4")
+    assert base.returncode == 0 and small.returncode == 0
+    assert base.stdout != small.stdout
+    assert "bp_cycles=210" in base.stdout
+    assert "bp_cycles=336" in small.stdout
+
+
+def test_characterize_bad_geometry_exits_nonzero():
+    proc = run_cli("characterize", "mk/multu", "--geometry", "banana")
+    assert proc.returncode != 0
+    assert "bad --geometry" in proc.stderr
+
+
+def test_characterize_unknown_workload_fails():
+    proc = run_cli("characterize", "no/such_workload")
+    assert proc.returncode != 0
+
+
+@pytest.fixture(scope="module")
+def sweep_runs(tmp_path_factory):
+    """Two identical sweep invocations against one artifact dir (small
+    spec to keep the subprocess cheap)."""
+    art = tmp_path_factory.mktemp("artifacts")
+    args = ("sweep", "mk/vector_add", "mk/multu",
+            "--widths", "4,8", "--geometries", "3", "--no-hybrid")
+    first = run_cli(*args, artifact_dir=art)
+    second = run_cli(*args, artifact_dir=art)
+    return art, first, second
+
+
+def test_sweep_exit_codes_and_artifacts(sweep_runs):
+    art, first, second = sweep_runs
+    assert first.returncode == 0, first.stderr
+    assert second.returncode == 0, second.stderr
+    for name in ("sweep.json", "guidelines.json"):
+        assert (art / name).exists(), name
+
+
+def test_sweep_artifact_schema(sweep_runs):
+    art, _, _ = sweep_runs
+    sweep = json.loads((art / "sweep.json").read_text())
+    assert set(sweep) >= {"spec", "summary", "cache", "cache_stats",
+                          "elapsed_s"}
+    assert sweep["spec"]["workloads"] == ["mk/vector_add", "mk/multu"]
+    assert sweep["spec"]["widths"] == [4, 8]
+    assert sweep["summary"]["grid_points"] == 2 * 2 * 2 * 3
+    assert sweep["cache_stats"]["entries"] >= 1
+
+    g = json.loads((art / "guidelines.json").read_text())
+    assert set(g) >= {"spec", "crossover", "hybrid_recommended", "rules",
+                      "geometry_profile", "sweep_summary"}
+    assert set(g["crossover"]) == {"mk/vector_add", "mk/multu"}
+    for c in g["crossover"].values():
+        assert {"crossover_width", "bs_win_widths", "tie_widths",
+                "prefix", "bs_feasible_widths"} <= set(c)
+    assert g["hybrid_recommended"] == []  # --no-hybrid
+
+
+def test_sweep_second_invocation_hits_cache(sweep_runs):
+    art, first, second = sweep_runs
+    assert "cache: miss" in first.stdout
+    assert "cache: hit" in second.stdout
+    assert json.loads((art / "sweep.json").read_text())["cache"]["hit"]
+
+
+def test_guidelines_prints_rules(tmp_path):
+    proc = run_cli("guidelines", "--no-cache", artifact_dir=tmp_path)
+    assert proc.returncode == 0, proc.stderr
+    assert "# derived rules" in proc.stdout
+    assert "hybrid_recommended" in proc.stdout
+    g = json.loads((tmp_path / "guidelines.json").read_text())
+    assert g["rules"]
+
+
+def test_characterize_bad_bandwidth_suffix_exits_cleanly():
+    proc = run_cli("characterize", "mk/multu", "--geometry",
+                   "128x512x64@abc")
+    assert proc.returncode != 0
+    assert "bad --geometry" in proc.stderr
+    assert "Traceback" not in proc.stderr

@@ -1,0 +1,340 @@
+"""Sweep-engine tests (ISSUE 4 tentpole).
+
+Pins the four contracts of `repro.sweep`:
+
+1. vectorized == scalar, bit-for-bit, exhaustively over every Table-5
+   kernel x layout x width {4, 8, 16, 32} (the acceptance grid) -- plus
+   the geometry axis;
+2. the sweep engine (SweepSpec / run_sweep): shapes, chunking, content-hash
+   disk cache, and mesh sharding all agree with the direct evaluation;
+3. frontier extraction matches the golden ``[guidelines]`` snapshot and
+   the CLI-emitted ``guidelines.json``;
+4. the Backend protocol: batched ``estimate_many`` equals the sequential
+   loop, and a non-default geometry actually changes reported cycles on
+   every cycle backend (the silent-PAPER_SYSTEM regression).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import Layout
+from repro.core.microkernels import MICROKERNELS, kernel_cost
+from repro.core.params import ArrayParams, SystemParams, PAPER_SYSTEM
+from repro.sweep import (
+    Geometry,
+    PAPER_GEOMETRY,
+    SweepSpec,
+    guidelines,
+    guidelines_lines,
+    hybrid_win_set,
+    iso_area_family,
+    run_sweep,
+)
+from repro.sweep import vectorized as V
+
+SRC = str(Path(__file__).parent.parent / "src")
+GOLDEN = Path(__file__).parent / "golden" / "paper_tables.txt"
+
+ACCEPTANCE_WIDTHS = (4, 8, 16, 32)
+
+
+def _mk_n(name: str) -> int:
+    return 8192 if name == "relu" else 1024
+
+
+# ------------------------------------------------ 1. bit-for-bit ----------
+
+@pytest.mark.parametrize("name", sorted(MICROKERNELS))
+def test_vectorized_equals_scalar_exhaustive(name):
+    """Every Table-5 kernel x layout x width {4,8,16,32}: the jnp recipe
+    evaluation equals `microkernels.kernel_cost` exactly (acceptance)."""
+    n = _mk_n(name)
+    for lay in (Layout.BP, Layout.BS):
+        for w in ACCEPTANCE_WIDTHS:
+            c = kernel_cost(name, lay, n=n, width=w)
+            load, comp, ro = V.kernel_cost_vec(
+                name, lay, n=n, width=w, cols=PAPER_SYSTEM.array.cols,
+                arrays=PAPER_SYSTEM.num_arrays)
+            assert (int(load), int(comp), int(ro)) == \
+                (c.load, c.compute, c.readout), (name, lay, w)
+
+
+def test_vectorized_equals_scalar_across_geometries():
+    """The geometry axis too: batching-engaged small systems included."""
+    geos = [Geometry(128, 512, 512), Geometry(128, 512, 4),
+            Geometry(64, 256, 2, row_bandwidth_bits=256),
+            Geometry(1024, 512, 64)]
+    for name in ("vector_add", "multu", "reduction", "relu", "bitweave2"):
+        n = _mk_n(name)
+        for g in geos:
+            s = g.system()
+            for lay in (Layout.BP, Layout.BS):
+                for w in (8, 32):
+                    c = kernel_cost(name, lay, n=n, width=w, sys=s)
+                    load, comp, ro = V.kernel_cost_vec(
+                        name, lay, n=n, width=w, cols=g.cols,
+                        arrays=g.arrays,
+                        row_bandwidth_bits=g.row_bandwidth_bits)
+                    assert (int(load), int(comp), int(ro)) == \
+                        (c.load, c.compute, c.readout), (name, lay, w, g)
+
+
+def test_grid_is_one_batched_evaluation():
+    """eval_grid returns the whole kernel x layout x width x geometry
+    surface from one call, matching per-point scalar evaluation."""
+    kernel_ns = tuple((k, _mk_n(k)) for k in sorted(MICROKERNELS))
+    geo = iso_area_family()
+    grid = np.asarray(V.eval_grid(
+        kernel_ns, ACCEPTANCE_WIDTHS,
+        [g.rows for g in geo], [g.cols for g in geo],
+        [g.arrays for g in geo], [g.row_bandwidth_bits for g in geo]))
+    assert grid.shape == (len(kernel_ns), 2, len(ACCEPTANCE_WIDTHS),
+                          len(geo), 3)
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        k = int(rng.integers(len(kernel_ns)))
+        li = int(rng.integers(2))
+        wi = int(rng.integers(len(ACCEPTANCE_WIDTHS)))
+        gi = int(rng.integers(len(geo)))
+        name, n = kernel_ns[k]
+        c = kernel_cost(name, (Layout.BP, Layout.BS)[li], n=n,
+                        width=ACCEPTANCE_WIDTHS[wi], sys=geo[gi].system())
+        assert tuple(grid[k, li, wi, gi]) == (c.load, c.compute, c.readout)
+
+
+# ------------------------------------------------ 2. sweep engine ---------
+
+def test_iso_area_family_paper_point_and_default_size():
+    fam = iso_area_family()
+    assert PAPER_GEOMETRY in fam
+    assert len(fam) >= 8  # acceptance: >= 8 iso-area geometries
+
+
+def test_run_sweep_shapes_and_feasibility(tmp_path):
+    spec = SweepSpec.default()
+    r = run_sweep(spec, cache_dir=str(tmp_path))
+    K, W, G = len(spec.workloads), len(spec.widths), len(spec.geometries)
+    assert r.breakdown.shape == (K, 2, W, G, 3)
+    assert r.totals.shape == (K, 2, W, G)
+    assert r.bs_feasible.shape == (K, W, G)
+    assert r.bp_feasible.shape == (K, G)
+    # paper geometry @ w=16: feasibility mirrors the repo's Challenge-2
+    # rule (SystemParams.bs_rows_required) per kernel -- if_then_else's
+    # 10 live words overflow a 128-row BS column, everything else fits
+    gi = spec.geometries.index(PAPER_GEOMETRY)
+    wi = spec.widths.index(16)
+    for k, name in enumerate(spec.workloads):
+        mk = MICROKERNELS[name.removeprefix("mk/")]
+        expected = not PAPER_SYSTEM.bs_row_overflow(mk.live_words, 16)
+        assert bool(r.bs_feasible[k, wi, gi]) == expected, name
+    assert r.bp_feasible[:, gi].all()
+    # 8-row arrays cannot hold any 16-bit BS footprint (3+ live words)
+    gi8 = next(i for i, g in enumerate(spec.geometries) if g.rows == 8)
+    assert not r.bs_feasible[:, wi, gi8].any()
+
+
+def test_run_sweep_chunking_invariant():
+    spec = SweepSpec.default(workloads=("mk/vector_add", "mk/gt_0"))
+    whole = run_sweep(spec, use_cache=False)
+    chunked = run_sweep(dataclasses.replace(spec, chunk=2),
+                        use_cache=False)
+    assert (whole.breakdown == chunked.breakdown).all()
+
+
+def test_sweep_cache_hit_and_invalidation(tmp_path):
+    spec = SweepSpec.default(workloads=("mk/multu",), widths=(8, 16))
+    r1 = run_sweep(spec, cache_dir=str(tmp_path))
+    assert not r1.cache["hit"]
+    r2 = run_sweep(spec, cache_dir=str(tmp_path))
+    assert r2.cache["hit"]
+    assert (r1.breakdown == r2.breakdown).all()
+    # a different spec misses
+    r3 = run_sweep(dataclasses.replace(spec, widths=(8, 32)),
+                   cache_dir=str(tmp_path))
+    assert not r3.cache["hit"]
+    assert r1.cache["key"] != r3.cache["key"]
+
+
+def test_sweep_sharded_matches_unsharded(tmp_path):
+    """`mesh=` routes through repro.dist.shard; results are identical
+    (graceful degradation makes this exact on any device count)."""
+    import jax
+    from jax.sharding import Mesh
+
+    spec = SweepSpec.default(workloads=("mk/vector_add", "mk/multu"))
+    base = run_sweep(spec, use_cache=False)
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    sharded = run_sweep(spec, use_cache=False, mesh=mesh)
+    assert (base.breakdown == sharded.breakdown).all()
+
+
+def test_sweep_rejects_multi_op_workloads():
+    with pytest.raises(ValueError, match="single-kernel"):
+        run_sweep(SweepSpec.default(workloads=("aes",)), use_cache=False)
+
+
+# ------------------------------------------------ 3. frontier / golden ----
+
+@pytest.fixture(scope="module")
+def default_guidelines():
+    return guidelines(use_cache=False)
+
+
+def _golden_guidelines_lines() -> list[str]:
+    text = GOLDEN.read_text()
+    body = text.split("[guidelines]")[1].splitlines()[1:]
+    return [ln for ln in body if ln.strip()]
+
+
+def test_guidelines_match_golden_snapshot(default_guidelines):
+    """Crossover table + hybrid set == the pinned [guidelines] section."""
+    assert guidelines_lines(default_guidelines) == \
+        _golden_guidelines_lines()
+
+
+def test_crossover_table_consistency(default_guidelines):
+    cross = default_guidelines["crossover"]
+    assert set(cross) == {f"mk/{k}" for k in MICROKERNELS}
+    for name, c in cross.items():
+        assert c["crossover_width"] == max(c["bs_win_widths"], default=0)
+        # win / tie sets never overlap
+        assert not set(c["bs_win_widths"]) & set(c["tie_widths"]), name
+    # sanity of the headline shape: sign-read is BS-always, division never
+    assert cross["mk/ge_0"]["bs_win_widths"] == [4, 8, 16, 32]
+    assert cross["mk/divu"]["bs_win_widths"] == []
+
+
+def test_hybrid_win_set_matches_planner():
+    from repro.workloads import characterize
+
+    hybrid = hybrid_win_set()
+    assert "aes" in hybrid
+    for app in hybrid:
+        s = characterize(app, backends=("planner",))["planner"].summary
+        assert s["is_hybrid"]
+        assert s["hybrid_cycles"] < min(s["bp_cycles"], s["bs_cycles"])
+
+
+def test_crossover_at_nondefault_geometry_differs():
+    """Capacity batching flips winners across the iso-area family for at
+    least one (workload, width) cell (the geometry axis is not inert)."""
+    r = run_sweep(SweepSpec.default(), use_cache=False)
+    from repro.sweep.frontier import bs_win_mask
+
+    wins = bs_win_mask(r)
+    assert (wins.any(axis=2) != wins.all(axis=2)).any()
+
+
+# ------------------------------------------------ 4. backend protocol -----
+
+SMALL_SYS = SystemParams(array=ArrayParams(rows=128, cols=512),
+                         num_arrays=4)
+
+
+def test_estimate_many_matches_sequential_loop():
+    from repro.workloads import AnalyticBackend, get_workload
+
+    b = AnalyticBackend()
+    ws = [get_workload(f"mk/{k}") for k in sorted(MICROKERNELS)]
+    for sys_ in (PAPER_SYSTEM, SMALL_SYS):
+        batched = b.estimate_many(ws, sys_)
+        for w, rep in zip(ws, batched):
+            ref = b.estimate(w, sys_)
+            assert rep.summary == ref.summary, w.name
+            assert rep.ops[0].breakdown == ref.ops[0].breakdown, w.name
+
+
+def test_estimate_many_falls_back_for_multi_op_workloads():
+    from repro.workloads import AnalyticBackend, PlannerBackend, \
+        get_workload
+
+    ws = [get_workload("aes"), get_workload("mk/multu")]
+    for backend in (AnalyticBackend(), PlannerBackend()):
+        batched = backend.estimate_many(ws)
+        assert [r.summary for r in batched] == \
+            [backend.estimate(w).summary for w in ws]
+
+
+@pytest.mark.parametrize("backend", ["analytic", "planner", "executor"])
+def test_nondefault_geometry_changes_cycles(backend):
+    """Regression (ISSUE 4 satellite): the Backend protocol's `sys` is
+    honoured -- a 4-array system must re-batch BP compute."""
+    from repro.workloads import characterize
+
+    default = characterize("mk/multu", backends=(backend,))[backend]
+    small = characterize("mk/multu", backends=(backend,),
+                         sys=SMALL_SYS)[backend]
+    assert small.summary["bp_cycles"] > default.summary["bp_cycles"]
+
+
+def test_all_backends_expose_estimate_many():
+    from repro.workloads import Backend, BACKENDS
+
+    for name, cls in BACKENDS.items():
+        b = cls()
+        assert isinstance(b, Backend), name
+        assert callable(b.estimate_many), name
+
+
+# ------------------------------------------------ CLI artifact match ------
+
+def test_cli_sweep_artifact_matches_golden(tmp_path):
+    """`python -m repro sweep` emits guidelines.json whose crossover table
+    matches the golden [guidelines] snapshot (acceptance)."""
+    env_dir = str(tmp_path / "artifacts")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "sweep", "--no-cache"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu", "PATH": "/usr/bin",
+             "REPRO_BENCH_ARTIFACT_DIR": env_dir},
+        cwd=str(tmp_path))
+    assert proc.returncode == 0, proc.stderr
+    g = json.loads((tmp_path / "artifacts" / "guidelines.json").read_text())
+    assert guidelines_lines(g) == _golden_guidelines_lines()
+
+
+# ------------------------------------------------ int32 range guard -------
+
+def test_vectorized_rejects_out_of_range_points():
+    """The int32 path must refuse (not silently wrap) operating points
+    whose movement terms exceed int32 (code-review regression)."""
+    with pytest.raises(ValueError, match="int32"):
+        V.kernel_cost_vec("multu", Layout.BP, n=2**26, width=32,
+                          cols=512, arrays=512)
+    with pytest.raises(ValueError, match="int32"):
+        run_sweep(SweepSpec.default(workloads=("mk/multu",),
+                                    n_override=2**26), use_cache=False)
+
+
+def test_estimate_many_falls_back_on_out_of_range_points():
+    """Huge-n single-kernel workloads take the scalar loop (exact python
+    ints) instead of erroring out of the batched fast path."""
+    from repro.workloads import AnalyticBackend
+    from repro.workloads.registry import microkernel_workload
+
+    w = microkernel_workload("multu", n=2**26, width=32)
+    b = AnalyticBackend()
+    (rep,) = b.estimate_many([w])
+    assert rep.summary == b.estimate(w).summary
+
+
+def test_guidelines_report_actual_crossover_geometry():
+    """When the sweep omits the paper geometry, the report must say which
+    geometry the crossover table was computed at (code-review fix)."""
+    fam = iso_area_family()
+    small = guidelines(run_sweep(SweepSpec.default(
+        workloads=("mk/multu",), geometries=fam[:3]), use_cache=False),
+        include_hybrid=False)
+    assert not small["crossover_at_paper_geometry"]
+    assert small["crossover_geometry"] == fam[0].to_dict()
+    full = guidelines(run_sweep(SweepSpec.default(
+        workloads=("mk/multu",)), use_cache=False), include_hybrid=False)
+    assert full["crossover_at_paper_geometry"]
+    assert full["crossover_geometry"] == PAPER_GEOMETRY.to_dict()

@@ -1,0 +1,99 @@
+"""Property-based sweep invariants (ISSUE 4 satellite).
+
+Uses the `_hypothesis_compat` shim: real hypothesis when installed,
+otherwise the deterministic seeded fallback. Three invariant families:
+
+* vectorized-vs-scalar cost equality on *random* (kernel, layout, width,
+  n, geometry) points -- the exhaustive acceptance grid lives in
+  tests/test_sweep.py; this fuzzes far off it;
+* monotonicity: BS per-batch compute non-decreasing in width for every
+  kernel; the BP multiply *total* turns superlinear in width once
+  capacity batching engages (Challenge 1 -- wider words both cost more
+  per op AND halve the word lanes);
+* the iso-area geometry family preserves total bit capacity and keeps
+  cols/bus width fixed, for arbitrary base systems.
+"""
+from __future__ import annotations
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.cost_model import KERNEL_RECIPES, Layout, SCALAR_OPS
+from repro.core.microkernels import MICROKERNELS, kernel_cost
+from repro.core.params import ArrayParams, SystemParams
+from repro.sweep import iso_area_family
+from repro.sweep.grid import Geometry
+from repro.sweep.vectorized import kernel_cost_vec
+
+KERNELS = sorted(MICROKERNELS)
+POW2_WIDTHS = (4, 8, 16, 32, 64)
+
+kernel_st = st.sampled_from(KERNELS)
+layout_st = st.sampled_from((Layout.BP, Layout.BS))
+width_st = st.sampled_from(POW2_WIDTHS)
+n_st = st.integers(1, 1 << 16)
+rows_st = st.sampled_from((8, 64, 128, 512, 2048))
+cols_st = st.sampled_from((128, 256, 512, 1024))
+arrays_st = st.integers(1, 1024)
+bw_st = st.sampled_from((128, 256, 512, 1024))
+
+
+@settings(max_examples=120, deadline=None)
+@given(kernel_st, layout_st, width_st, n_st, rows_st, cols_st, arrays_st,
+       bw_st)
+def test_vectorized_equals_scalar_random_points(kernel, layout, width, n,
+                                                rows, cols, arrays, bw):
+    """Bit-for-bit equality at arbitrary integer operating points."""
+    sys = SystemParams(array=ArrayParams(rows=rows, cols=cols),
+                       num_arrays=arrays, row_bandwidth_bits=bw)
+    c = kernel_cost(kernel, layout, n=n, width=width, sys=sys)
+    load, comp, ro = kernel_cost_vec(
+        kernel, layout, n=n, width=width, cols=cols, arrays=arrays,
+        row_bandwidth_bits=bw)
+    assert (int(load), int(comp), int(ro)) == \
+        (c.load, c.compute, c.readout), (kernel, layout, width, n)
+
+
+@settings(max_examples=60, deadline=None)
+@given(kernel_st, st.sampled_from(POW2_WIDTHS[:-1]), n_st)
+def test_bs_compute_nondecreasing_in_width(kernel, width, n):
+    """Serial kernels never get cheaper per batch as operands widen."""
+    f = KERNEL_RECIPES[kernel].compute[Layout.BS]
+    assert f(SCALAR_OPS, 2 * width, n) >= f(SCALAR_OPS, width, n)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.sampled_from((4, 8, 16)), st.integers(1, 8), arrays_st)
+def test_bp_mult_total_superlinear_once_batched(width, n_factor, arrays):
+    """Doubling the width more than doubles the BP multiply total when
+    the workload exceeds one capacity batch: movement doubles exactly,
+    but compute pays (2w+2) cycles over half the word lanes."""
+    sys = SystemParams(array=ArrayParams(rows=128, cols=512),
+                       num_arrays=arrays)
+    # n large enough that both widths run > 1 full batch of word lanes
+    n = n_factor * sys.total_columns
+    t1 = kernel_cost("multu", Layout.BP, n=n, width=width, sys=sys).total
+    t2 = kernel_cost("multu", Layout.BP, n=n, width=2 * width,
+                     sys=sys).total
+    assert t2 > 2 * t1, (width, n, arrays)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.sampled_from((64, 128, 256)), cols_st,
+       st.sampled_from((64, 128, 512, 1024)), bw_st)
+def test_iso_area_family_preserves_capacity(rows, cols, arrays, bw):
+    base = SystemParams(array=ArrayParams(rows=rows, cols=cols),
+                        num_arrays=arrays, row_bandwidth_bits=bw)
+    fam = iso_area_family(base)
+    assert fam, (rows, arrays)
+    cap = rows * cols * arrays
+    for g in fam:
+        assert g.capacity_bits == cap
+        assert g.cols == cols and g.row_bandwidth_bits == bw
+        assert g.rows * g.arrays == rows * arrays
+    # the family genuinely trades rows for arrays (not one point)
+    assert len({g.rows for g in fam}) == len(fam)
+
+
+def test_paper_family_contains_paper_point():
+    fam = iso_area_family()
+    assert Geometry(128, 512, 512) in fam
