@@ -1,0 +1,128 @@
+"""Layout-plan compilation benchmarks + oracle rows.
+
+Rows:
+
+* ``plan.compile``            -- compile every Table-6 app at the paper
+  geometry (repro.plan.compile_plan; one timed pass over the registry).
+* ``plan.vs_legacy``          -- oracle: the DAG scheduler's plan total
+  AND schedule equal an *independent* verbatim copy of the pre-refactor
+  2-state phase DP for every Table-6 app (``match=``; `core.planner.plan`
+  itself is now a shim over the same scheduler, so it cannot be the
+  reference).
+* ``plan.beats_statics``      -- oracle: ``total <= min(static_bp,
+  static_bs)`` for every app across the full iso-area geometry family
+  (the ISSUE-5 acceptance bound; ``match=``).
+* ``plan.replay``             -- oracle: executor-replayed plan cycles of
+  the 13 executable Table-5 kernels match the planner's prediction up to
+  the documented Sec.-8 calibration deltas (``match=``).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, quick, time_us
+
+
+def _apps():
+    from repro.workloads import workload_names
+
+    names = workload_names("table6")
+    return names[:4] if quick() else names
+
+
+def bench_compile():
+    from repro.plan import compile_plan
+    from repro.workloads import get_workload
+
+    apps = _apps()
+
+    def run():
+        for app in apps:
+            compile_plan(get_workload(app))
+
+    us = time_us(run)
+    return [emit("plan.compile", us, f"apps={len(apps)}")]
+
+
+def _reference_dp(phases, sys):
+    """The pre-refactor ``core.planner.plan`` DP, kept verbatim as an
+    independent reference (the shipped ``plan`` is a shim over the new
+    scheduler and cannot oracle it)."""
+    from repro.core.cost_model import Layout
+    from repro.core.transpose import transpose_cycles
+
+    layouts = (Layout.BP, Layout.BS)
+    INF = float("inf")
+    cost, back = {}, []
+    for lay in layouts:
+        cost[lay] = phases[0].cycles(lay)
+    for ph in phases[1:]:
+        sw = transpose_cycles(ph.rows_bp, ph.rows_bs, "bp2bs", sys)
+        new_cost, back_i = {}, {}
+        for lay in layouts:
+            best, best_prev = INF, None
+            for prev in layouts:
+                c = cost[prev] + (0 if prev == lay else sw) \
+                    + ph.cycles(lay)
+                if c < best:
+                    best, best_prev = c, prev
+            new_cost[lay] = best
+            back_i[lay] = best_prev
+        cost = new_cost
+        back.append(back_i)
+    end = min(layouts, key=lambda lay: cost[lay])
+    sched = [end]
+    for back_i in reversed(back):
+        sched.append(back_i[sched[-1]])
+    sched.reverse()
+    return tuple(sched), int(cost[end])
+
+
+def bench_vs_legacy():
+    from repro.core.params import PAPER_SYSTEM
+    from repro.plan import compile_plan
+    from repro.workloads import get_workload
+
+    ok = True
+    for app in _apps():
+        w = get_workload(app)
+        p = compile_plan(w)
+        sched, total = _reference_dp(w.to_phases(), PAPER_SYSTEM)
+        ok &= p.total_cycles == total and p.schedule == sched
+    return [emit("plan.vs_legacy", 0.0, f"match={ok}")]
+
+
+def bench_beats_statics():
+    from repro.plan import compile_plan
+    from repro.sweep import iso_area_family
+    from repro.workloads import get_workload
+
+    geos = iso_area_family()
+    if quick():
+        geos = geos[:3]
+    ok = True
+    for app in _apps():
+        w = get_workload(app)
+        for g in geos:
+            p = compile_plan(w, geometry=g)
+            ok &= p.total_cycles <= min(p.static_bp, p.static_bs)
+    return [emit("plan.beats_statics", 0.0,
+                 f"apps={len(_apps())};geometries={len(geos)};match={ok}")]
+
+
+def bench_replay():
+    from repro.pim.programs import EXECUTABLE_KERNELS
+    from repro.plan import compile_plan, replay_matches, replay_plan
+    from repro.workloads import get_workload
+
+    ok, n_rows = True, 0
+    for kernel in EXECUTABLE_KERNELS:
+        w = get_workload(f"mk/{kernel}")
+        p = compile_plan(w)
+        rows = replay_plan(p, w, execute=not quick())
+        ok &= replay_matches(rows)
+        n_rows += len(rows)
+    return [emit("plan.replay", 0.0,
+                 f"kernels={len(EXECUTABLE_KERNELS)};rows={n_rows};"
+                 f"match={ok}")]
+
+
+ALL = [bench_compile, bench_vs_legacy, bench_beats_statics, bench_replay]

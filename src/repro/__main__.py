@@ -12,6 +12,12 @@ Subcommands:
                        ``bench-artifacts/characterize.json``.
                        ``--geometry RxCxA[@BW]`` re-costs under a
                        non-default system geometry.
+* ``plan``          -- compile workloads into executable layout plans
+                       (repro.plan): per-op BP/BS assignment with explicit
+                       transposes, geometry feasibility, optional executor
+                       replay (``--execute``).  ``--quick`` is the CI
+                       smoke: every Table-6 app's plan to
+                       ``bench-artifacts/plans.json``.
 * ``sweep``         -- the design-space sweep engine (repro.sweep):
                        workloads x widths x iso-area geometries in one
                        jitted batched evaluation, content-hash cached;
@@ -30,6 +36,9 @@ Examples::
     python -m repro characterize mk/multu aes --ops
     python -m repro characterize aes --geometry 128x512x64
     python -m repro characterize --quick
+    python -m repro plan aes --initial-layout BP --steps
+    python -m repro plan vgg --geometry 8x512x8192 --execute
+    python -m repro plan --quick
     python -m repro sweep --widths 4,8,16,32
     python -m repro guidelines
 """
@@ -153,6 +162,72 @@ def cmd_characterize(args) -> int:
     return 0
 
 
+def cmd_plan(args) -> int:
+    from repro.core.cost_model import Layout
+    from repro.core.params import PAPER_SYSTEM
+    from repro.plan import compile_plan, replay_plan
+    from repro.workloads import get_workload, workload_names
+
+    names = list(args.workloads)
+    if args.quick and not names:
+        names = workload_names("table6")
+    if not names:
+        print("error: no workloads given (or use --quick)", file=sys.stderr)
+        return 2
+    system = (_parse_geometry(args.geometry) if args.geometry
+              else PAPER_SYSTEM)
+    init = Layout(args.initial_layout) if args.initial_layout else None
+    artifact: dict[str, dict] = {}
+    full: dict[str, dict] = {}
+    for name in names:
+        w = get_workload(name)
+        p = compile_plan(w, system, initial_layout=init)
+        sched = "".join("S" if lay is not Layout.BP else "P"
+                        for lay in p.schedule)
+        print(f"{name}: total={p.total_cycles} "
+              f"static_bp={p.static_bp} static_bs={p.static_bs} "
+              f"speedup={p.hybrid_speedup:.2f}x "
+              f"n_transposes={p.n_transposes} feasible={p.feasible}")
+        if args.steps:
+            print(f"  schedule [P=BP S=BS]: {sched}")
+            for s in p.steps:
+                flag = "" if s.feasible else "  !row-overflow"
+                print(f"  {s.phase:24s} {s.layout.value} "
+                      f"{s.cycles:>12d}{flag}")
+        d = p.to_dict(include_steps=not args.quick)
+        if args.json:
+            full[name] = p.to_dict()
+        if args.execute:
+            rows = replay_plan(p, w, system)
+            d["replay"] = rows
+            if args.json:
+                full[name]["replay"] = rows
+            for r in rows:
+                if r["predicted"] is None:
+                    print(f"  replay {r['op']} [{r['layout']}]: "
+                          f"executed={r['executed']} ({r['note']})")
+                else:
+                    ok = "OK" if r["delta"] == r["expected_delta"] \
+                        else "UNEXPECTED"
+                    print(f"  replay {r['op']} [{r['layout']}]: "
+                          f"predicted={r['predicted']} "
+                          f"executed={r['executed']} "
+                          f"delta={r['delta']:+d} "
+                          f"(expected {r['expected_delta']:+d}) {ok}")
+        artifact[name] = d
+    if args.quick:
+        os.makedirs(_artifact_dir(), exist_ok=True)
+        path = os.path.join(_artifact_dir(), "plans.json")
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=1, sort_keys=True)
+        print(f"\n# wrote per-workload plan summaries to {path}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(full, f, indent=1, sort_keys=True)
+        print(f"# wrote full plans to {args.json}")
+    return 0
+
+
 def _build_sweep_spec(args):
     from repro.sweep import SweepSpec, iso_area_family
 
@@ -262,6 +337,29 @@ def main(argv=None) -> int:
                         help="system geometry rows x cols x arrays "
                              "(optional @row-bus-bits), e.g. 128x512x64")
     p_char.set_defaults(fn=cmd_characterize)
+
+    p_plan = sub.add_parser(
+        "plan", help="compile workloads into executable layout plans")
+    p_plan.add_argument("workloads", nargs="*",
+                        help="registry names (e.g. aes, vgg, mk/multu)")
+    p_plan.add_argument("--geometry", default=None, metavar="RxCxA[@BW]",
+                        help="system geometry rows x cols x arrays "
+                             "(optional @row-bus-bits), e.g. 128x512x64")
+    p_plan.add_argument("--initial-layout", default=None,
+                        choices=("BP", "BS"),
+                        help="layout the data arrives in (charges the "
+                             "arrival transpose)")
+    p_plan.add_argument("--steps", action="store_true",
+                        help="print per-step schedule rows")
+    p_plan.add_argument("--execute", action="store_true",
+                        help="replay executable ops on the micro-op "
+                             "executor (predicted vs executed cycles)")
+    p_plan.add_argument("--quick", action="store_true",
+                        help="CI smoke: all table6 apps, summaries to "
+                             "bench-artifacts/plans.json")
+    p_plan.add_argument("--json", default=None, metavar="PATH",
+                        help="dump full plans (steps + transposes) as JSON")
+    p_plan.set_defaults(fn=cmd_plan)
 
     p_sweep = sub.add_parser(
         "sweep", help="design-space sweep over workload x width x geometry")

@@ -267,6 +267,21 @@ def golden_snapshot() -> str:
                  f"hybrid={acc['hybrid']} "
                  f"speedup={acc['speedup']:.2f}")
 
+    # Compiled layout plans (repro.plan): per-app plan totals, transpose
+    # counts, and the BS share of the step schedule at the paper geometry.
+    # Totals must equal the [table6] hybrid column (the plan IR route and
+    # the legacy phase DP are equivalence-pinned); the step-shape columns
+    # catch schedule drift the totals alone would hide.
+    from repro.plan import compile_plan
+    from repro.workloads import get_workload
+    lines += ["", "[plans] app total n_transposes bs_steps/steps feasible "
+                  "(repro.plan.compile_plan @ paper geometry)"]
+    for app in workload_names("table6"):
+        p = compile_plan(get_workload(app))
+        bs_steps = sum(1 for s in p.steps if s.layout is Layout.BS)
+        lines.append(f"{app} {p.total_cycles} {p.n_transposes} "
+                     f"{bs_steps}/{len(p.steps)} {int(p.feasible)}")
+
     # Machine-derived guidelines (repro.sweep): per-workload crossover
     # widths at the paper geometry plus the planner hybrid-win set --
     # pinned so guideline drift fails tier-1 (DESIGN.md Sec. 9).

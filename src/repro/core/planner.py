@@ -1,12 +1,25 @@
 """Hybrid layout planner: choose BP / BS / per-phase hybrid schedules.
 
+.. deprecated::
+    This module is now a thin legacy shim over the DAG scheduler in
+    ``repro.plan`` (``repro.plan.scheduler.solve_phases`` solves the
+    phase chain; results are bit-for-bit the old 2-state DP, pinned by
+    tests/test_plan.py).  New call sites should compile workloads
+    directly::
+
+        from repro.plan import compile_plan
+        compile_plan(get_workload("aes"))      # -> LayoutPlan
+
+    ``Phase``/``Plan`` and :func:`plan` remain supported as the
+    flat-phase-list compatibility surface (DESIGN.md Sec. 10).
+
 The paper evaluates one hand-built hybrid schedule (AES, Sec. 5.4). We
 generalize it: a workload is a sequence of :class:`Phase`s, each with BP/BS
-cycle costs and a layout-dependent resident footprint; the planner runs a
-2-state dynamic program over phases, charging the on-chip transpose cost at
-every layout switch, and returns the optimal schedule plus both static
-baselines. This is the paper's "compiler analyses that automatically
-partition code into layout-optimal regions" future-work item, made concrete.
+cycle costs and a layout-dependent resident footprint; the planner charges
+the on-chip transpose cost at every layout switch and returns the optimal
+schedule plus both static baselines. This is the paper's "compiler
+analyses that automatically partition code into layout-optimal regions"
+future-work item, made concrete.
 """
 from __future__ import annotations
 
@@ -73,61 +86,24 @@ def _switch_cost(prev: Phase, cur: Phase, frm: Layout, to: Layout,
 
 def plan(phases: Sequence[Phase], sys: SystemParams = PAPER_SYSTEM,
          initial_layout: Optional[Layout] = None) -> Plan:
-    """2-state DP over the phase sequence.
+    """Optimal layout schedule over the phase sequence.
 
     `initial_layout` is the layout the data arrives in; if given, a switch
     before the first phase is charged too.
+
+    Legacy shim: the solve lives in ``repro.plan.scheduler`` (the chain
+    case of the DAG scheduler, identical iteration order and BP-preferred
+    tie-breaking as the original 2-state DP).
     """
     if not phases:
         raise ValueError("empty phase list")
-    layouts = (Layout.BP, Layout.BS)
+    from repro.plan.scheduler import solve_phases
 
-    INF = float("inf")
-    # cost[l] = best cost ending with layout l; back[i][l] = predecessor layout
-    cost = {}
-    back: list[dict[Layout, Layout]] = []
-    first = phases[0]
-    for l in layouts:
-        c = first.cycles(l)
-        if initial_layout is not None and initial_layout != l:
-            c += _switch_cost(first, first, initial_layout, l, sys)
-        cost[l] = c
-    for i in range(1, len(phases)):
-        ph = phases[i]
-        new_cost = {}
-        back_i = {}
-        for l in layouts:
-            best, best_prev = INF, None
-            for p in layouts:
-                c = cost[p] + _switch_cost(phases[i - 1], ph, p, l, sys) \
-                    + ph.cycles(l)
-                if c < best:
-                    best, best_prev = c, p
-            new_cost[l] = best
-            back_i[l] = best_prev
-        cost = new_cost
-        back.append(back_i)
-
-    # traceback
-    end = min(layouts, key=lambda l: cost[l])
-    sched = [end]
-    for back_i in reversed(back):
-        sched.append(back_i[sched[-1]])
-    sched.reverse()
-    total = int(cost[end])
-
-    static_bp = sum(p.bp_cycles for p in phases)
-    static_bs = sum(p.bs_cycles for p in phases)
-    if initial_layout is Layout.BS:
-        static_bp += _switch_cost(first, first, Layout.BS, Layout.BP, sys)
-    if initial_layout is Layout.BP:
-        static_bs += _switch_cost(first, first, Layout.BP, Layout.BS, sys)
-
-    n_tr = sum(1 for a, b in zip(sched, sched[1:]) if a != b)
-    if initial_layout is not None and sched[0] != initial_layout:
-        n_tr += 1
-    tr_total = total - sum(p.cycles(l) for p, l in zip(phases, sched))
-    return Plan(tuple(sched), total, static_bp, static_bs, n_tr, tr_total)
+    sched, transposes, total, static_bp, static_bs = solve_phases(
+        phases, sys, initial_layout)
+    tr_total = sum(t.cycles for t in transposes)
+    return Plan(tuple(sched), total, static_bp, static_bs,
+                len(transposes), tr_total)
 
 
 def hybrid_profitability_threshold(phases: Sequence[Phase],

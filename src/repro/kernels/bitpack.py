@@ -1,9 +1,15 @@
 """Bit-transposition (packing) Pallas kernel -- the on-chip transpose unit.
 
 Converts word-layout (BP) weights into bitplane (BS) layout: words [K, N]
-with values < 2^bits become uint32 planes [bits, K//32, N]. This is the
-hardware transposer of paper Sec. 4.1 as a TPU kernel; the hybrid executor
-charges its cost exactly like the paper charges read(M)+core+write(N).
+with values < 2^bits become uint32 planes [bits, ceil(K/32), N]. This is
+the hardware transposer of paper Sec. 4.1 as a TPU kernel; the hybrid
+executor charges its cost exactly like the paper charges
+read(M)+core+write(N).
+
+K need not be a multiple of 32: the packer zero-pads the K axis to the
+next multiple (zero rows pack to zero bits, so downstream bit-serial
+contractions are unaffected) and :func:`bitunpack` strips the padding on
+the way back (round-trip pinned in tests/test_kernels.py).
 
 Grid: (bits, K/32/bg, N/bn): each program packs `bg` groups of 32 rows for
 one bit position.
@@ -29,10 +35,13 @@ def _kernel(w_ref, o_ref, *, bg: int):
 
 def bitpack(w: jax.Array, bits: int, *, block_groups: int = 4,
             block_n: int = 256, interpret: bool = True) -> jax.Array:
-    """w: unsigned words [K, N] (values < 2^bits) -> uint32 [bits, K//32, N]."""
+    """w: unsigned words [K, N] (values < 2^bits) -> uint32
+    [bits, ceil(K/32), N]; K is zero-padded to the next multiple of 32."""
     K, N = w.shape
-    assert K % 32 == 0
-    Kg = K // 32
+    pad = -K % 32
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    Kg = (K + pad) // 32
     bg = min(block_groups, Kg)
     while Kg % bg:
         bg -= 1
@@ -47,3 +56,17 @@ def bitpack(w: jax.Array, bits: int, *, block_groups: int = 4,
         out_shape=jax.ShapeDtypeStruct((bits, Kg, N), jnp.uint32),
         interpret=interpret,
     )(w)
+
+
+def bitunpack(planes: jax.Array, k: int | None = None) -> jax.Array:
+    """Inverse of :func:`bitpack`: uint32 planes [bits, Kg, N] -> words
+    [k, N] (uint32), stripping the zero rows the packer added
+    (``k`` defaults to the full ``Kg * 32``)."""
+    bits, Kg, N = planes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    rows = ((planes[:, :, None, :] >> shifts[None, None, :, None])
+            & jnp.uint32(1)).reshape(bits, Kg * 32, N)
+    words = jnp.zeros((Kg * 32, N), jnp.uint32)
+    for b in range(bits):
+        words = words | (rows[b] << jnp.uint32(b))
+    return words if k is None else words[:k]

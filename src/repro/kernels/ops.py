@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.core.cost_model import Layout
 from repro.core.taxonomy import Recommendation, classify
-from repro.kernels.bitpack import bitpack
+from repro.kernels.bitpack import bitpack, bitunpack
 from repro.kernels.bitparallel_matmul import bitparallel_matmul
 from repro.kernels.bitserial_matmul import bitserial_matmul
 from repro.workloads.ir import Op
@@ -23,8 +23,19 @@ def pack_weights(w: jax.Array, bits: int, interpret: bool = True):
     return bitpack(w, bits, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def unpack_weights(planes: jax.Array, k: int | None = None):
+    """BS -> BP layout conversion (strips bitpack's K padding)."""
+    return bitunpack(planes, k)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def matmul_bs(x: jax.Array, planes: jax.Array, interpret: bool = True):
+    # bitpack zero-pads K to a multiple of 32; mirror the padding on the
+    # activation side (zero rows contribute nothing to the contraction)
+    k_planes = planes.shape[1] * 32
+    if x.shape[1] != k_planes:
+        x = jnp.pad(x, ((0, 0), (0, k_planes - x.shape[1])))
     return bitserial_matmul(x, planes, interpret=interpret)
 
 
@@ -53,15 +64,31 @@ def choose_layout(*, weight_bits: int, m: int, n: int, k: int,
     return classify(op.features()).recommendation
 
 
-def layout_aware_matmul(x: jax.Array, w: jax.Array, *, weight_bits: int,
-                        interpret: bool = True):
-    """Dispatch x @ w to the BS (bitplane) or BP (word) kernel per the
-    planner's verdict. w: unsigned ints < 2^weight_bits, [K, N]."""
+def planned_matmul(x: jax.Array, w: jax.Array, *, weight_bits: int,
+                   plan=None, op_name: str | None = None,
+                   interpret: bool = True):
+    """Dispatch x @ w to the BS (bitplane) or BP (word) kernel per a
+    compiled :class:`repro.plan.ir.LayoutPlan` -- the same plan the cost
+    model priced.  ``plan.layout_for(op_name)`` picks the kernel; with no
+    plan, fall back to the Table-8 advisor (:func:`choose_layout`).
+    w: unsigned ints < 2^weight_bits, [K, N].  Returns (y, Layout)."""
     m, k = x.shape
     n = w.shape[1]
-    rec = choose_layout(weight_bits=weight_bits, m=m, n=n, k=k)
-    if rec == Recommendation.BS:
+    if plan is not None:
+        layout = plan.layout_for(op_name)
+    else:
+        rec = choose_layout(weight_bits=weight_bits, m=m, n=n, k=k)
+        layout = Layout.BS if rec == Recommendation.BS else Layout.BP
+    if layout is Layout.BS:
         planes = pack_weights(w.astype(jnp.uint32), weight_bits,
                               interpret=interpret)
         return matmul_bs(x, planes, interpret=interpret), Layout.BS
     return matmul_bp(x, w.astype(jnp.int8), interpret=interpret), Layout.BP
+
+
+def layout_aware_matmul(x: jax.Array, w: jax.Array, *, weight_bits: int,
+                        interpret: bool = True):
+    """Advisor-driven dispatch (no plan): x @ w via the BS or BP kernel
+    per the Table-8 verdict. w: unsigned ints < 2^weight_bits, [K, N]."""
+    return planned_matmul(x, w, weight_bits=weight_bits,
+                          interpret=interpret)

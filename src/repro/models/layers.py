@@ -342,6 +342,27 @@ def lm_logits(p, x, embedding=None):
     return shard(logits, "batch", None, "model")
 
 
+def pim_quantized_linear(x, w, *, weight_bits: int, plan=None,
+                         op_name: str | None = None,
+                         interpret: bool = True):
+    """Quantized linear dispatched by a compiled ``repro.plan`` layout
+    plan -- the model layer consumes the same BP/BS decision the cost
+    model priced (falling back to the Table-8 advisor when no plan is
+    given).
+
+    x: integer activations [..., K] (int8-range); w: unsigned words
+    [K, N] with values < 2^weight_bits.  Returns (y [..., N] int32, the
+    Layout actually dispatched).
+    """
+    from repro.kernels.ops import planned_matmul
+
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y, layout = planned_matmul(x2, w, weight_bits=weight_bits, plan=plan,
+                               op_name=op_name, interpret=interpret)
+    return y.reshape(lead + (w.shape[1],)), layout
+
+
 def chunked_cross_entropy(logits_fn, x, labels, mask, chunk: int = 512):
     """CE over S in chunks so the [B, chunk, V] logits (vocab-sharded) are
     the only live logits tensor."""

@@ -259,6 +259,53 @@ def encrypt_hybrid(plaintext: np.ndarray, key: np.ndarray) -> np.ndarray:
     return np.asarray(s)
 
 
+def encrypt_planned(plaintext: np.ndarray, key: np.ndarray,
+                    layout_of) -> np.ndarray:
+    """Drive the functional AES simulation with a compiled layout plan.
+
+    ``layout_of`` maps the ``aes`` workload's op names (``ARK0``,
+    ``SB1``, ``SR1``, ``MC1``, ...) to ``"BP"``/``"BS"`` (e.g.
+    ``dict(compile_plan(get_workload("aes")).op_schedule())``).  The
+    state transposes lazily at layout boundaries -- exactly where the
+    plan inserts its explicit :class:`~repro.plan.ir.TransposeStep`s --
+    so the hand-built ``encrypt_hybrid`` schedule is the special case
+    ``SB* -> BS, everything else -> BP``.
+    """
+    rks = expand_key(key)
+    state = jnp.asarray(plaintext, dtype=jnp.uint8)   # BP form
+    cur = "BP"
+
+    def in_layout(lay):
+        nonlocal state, cur
+        lay = getattr(lay, "value", lay)
+        if lay != cur:
+            state = (bp_to_bs(state.astype(jnp.uint32), 8) if lay == "BS"
+                     else bs_to_bp(state).astype(jnp.uint8))
+            cur = lay
+        return state
+
+    def ark(r):
+        nonlocal state
+        s = in_layout(layout_of[f"ARK{r}"])
+        state = (s ^ jnp.asarray(rks[r]) if cur == "BP" else
+                 bs_add_round_key(s, pack(jnp.asarray(rks[r], jnp.uint32),
+                                          8)))
+
+    ark(0)
+    for r in range(1, 11):
+        s = in_layout(layout_of[f"SB{r}"])
+        state = bp_sub_bytes(s) if cur == "BP" else bs_sub_bytes(s)
+        s = in_layout(layout_of[f"SR{r}"])
+        state = shift_rows(s) if cur == "BP" else bs_shift_rows(s)
+        if r < 10:
+            s = in_layout(layout_of[f"MC{r}"])
+            state = bp_mix_columns(s) if cur == "BP" else bs_mix_columns(s)
+        ark(r)
+    if cur == "BS":
+        state = bs_to_bp(state).astype(jnp.uint8)
+    return np.asarray(state)
+
+
 # ------------------------------------------------------------ pure-Py oracle
 
 def encrypt_reference(plaintext: np.ndarray, key: np.ndarray) -> np.ndarray:

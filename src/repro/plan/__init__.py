@@ -1,0 +1,32 @@
+"""repro.plan: layout plans as a first-class, executable IR.
+
+Public surface (see README.md in this directory and DESIGN.md Sec. 10)::
+
+    from repro.plan import (
+        LayoutPlan, PlanStep, TransposeStep,   # the plan IR
+        compile_plan, PlanError,               # Workload DAG -> plan
+        plan_programs, replay_plan,            # lowering + executor replay
+    )
+
+    p = compile_plan(get_workload("aes"))
+    p.total_cycles, p.op_schedule(), p.feasible
+    replay_plan(p, get_workload("aes"))        # predicted vs executed
+
+CLI: ``python -m repro plan <workload> [--geometry RxCxA] [--execute]``.
+"""
+from repro.plan.ir import (  # noqa: F401
+    LayoutPlan,
+    PlanStep,
+    TransposeStep,
+)
+from repro.plan.lower import (  # noqa: F401
+    plan_programs,
+    replay_matches,
+    replay_plan,
+    step_program,
+)
+from repro.plan.scheduler import (  # noqa: F401
+    PlanError,
+    compile_plan,
+    solve_phases,
+)

@@ -1,0 +1,181 @@
+"""The layout-plan IR: an executable per-op BP/BS assignment.
+
+A :class:`LayoutPlan` is the compilation target of the planning layer
+(``repro.plan.scheduler.compile_plan``): one layout decision per
+*schedulable step* of a :class:`repro.workloads.ir.Workload` DAG, with the
+transposes required at every layout boundary materialized as explicit
+:class:`TransposeStep`s (the paper's Sec.-4.1 read(M)+core+write(N)
+accounting -- never an implicit surcharge).  A plan is therefore
+
+* **priceable** -- ``total_cycles`` is the exact DP/min-cut objective, and
+  ``static_bp``/``static_bs`` keep the uniform-assignment baselines the
+  acceptance bound is stated against (plan <= min static, always);
+* **checkable** -- every step carries its per-layout row footprint and the
+  geometry-feasibility verdict derived from ``sweep.Geometry`` rows and
+  the Table-5 ``live_words`` model (``SystemParams.bs_rows_required``);
+* **executable** -- ``repro.plan.lower`` maps kernel steps to their
+  ``pim.programs`` micro-op program in the *assigned* layout and replays
+  them on the executor, and ``kernels.ops.planned_matmul`` /
+  ``models.layers.pim_quantized_linear`` dispatch the Pallas matmuls per
+  ``layout_for(op)`` -- the same plan the cost model priced.
+
+Steps vs ops: an op lowers to 1..3 planner phases (``workloads.ir.
+op_phases``; matmul/conv split into load/mac/out).  Each phase is one
+step -- one layout choice point -- so linear workloads reproduce the
+legacy 2-state phase DP bit-for-bit.  ``layout_for`` reports the op-level
+layout as the assignment of the op's *dominant* (most expensive) step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.cost_model import Layout
+from repro.sweep.grid import Geometry
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStep:
+    """One scheduled step: a planner phase with its layout assignment."""
+
+    index: int           #: position in the plan's topological step order
+    op: str              #: owning op name (workload.ops[op_index].name)
+    op_index: int
+    phase: str           #: phase name (e.g. ``gemv.load`` / ``gemv.mac``)
+    kind: str            #: owning op kind
+    layout: Layout
+    bp_cycles: int
+    bs_cycles: int
+    #: rows the step's live state occupies per layout (transpose feed/drain
+    #: granularity AND the row-capacity feasibility footprint)
+    rows_bp: int
+    rows_bs: int
+    bp_feasible: bool = True
+    bs_feasible: bool = True
+
+    @property
+    def cycles(self) -> int:
+        return self.bp_cycles if self.layout is Layout.BP else self.bs_cycles
+
+    @property
+    def feasible(self) -> bool:
+        """Does the *assigned* layout fit the geometry's rows?"""
+        return self.bp_feasible if self.layout is Layout.BP \
+            else self.bs_feasible
+
+
+@dataclasses.dataclass(frozen=True)
+class TransposeStep:
+    """An explicit layout conversion inserted at a plan boundary."""
+
+    before_step: int     #: step index whose input is transposed
+    direction: str       #: ``bp2bs`` | ``bs2bp``
+    cycles: int          #: read(rows_src) + core + write(rows_dst)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutPlan:
+    """A compiled, executable layout assignment for one workload."""
+
+    workload: str
+    geometry: Geometry
+    steps: tuple[PlanStep, ...]
+    transposes: tuple[TransposeStep, ...]
+    total_cycles: int
+    static_bp: int
+    static_bs: int
+    initial_layout: Optional[Layout] = None
+
+    # ------------------------------------------------------------- totals
+    @property
+    def n_transposes(self) -> int:
+        return len(self.transposes)
+
+    @property
+    def transpose_cycles_total(self) -> int:
+        return sum(t.cycles for t in self.transposes)
+
+    @property
+    def best_static(self) -> int:
+        return min(self.static_bp, self.static_bs)
+
+    @property
+    def best_static_layout(self) -> Layout:
+        return Layout.BP if self.static_bp <= self.static_bs else Layout.BS
+
+    @property
+    def hybrid_speedup(self) -> float:
+        return self.best_static / self.total_cycles
+
+    @property
+    def schedule(self) -> tuple[Layout, ...]:
+        """Per-step layout sequence (the legacy ``Plan.schedule`` shape)."""
+        return tuple(s.layout for s in self.steps)
+
+    @property
+    def is_hybrid(self) -> bool:
+        return len(set(self.schedule)) > 1
+
+    @property
+    def feasible(self) -> bool:
+        """Every step's assigned layout fits the geometry's rows."""
+        return all(s.feasible for s in self.steps)
+
+    @property
+    def infeasible_steps(self) -> tuple[PlanStep, ...]:
+        return tuple(s for s in self.steps if not s.feasible)
+
+    # ---------------------------------------------------------- op lookup
+    def steps_for(self, op: str) -> tuple[PlanStep, ...]:
+        return tuple(s for s in self.steps if s.op == op)
+
+    def layout_for(self, op: Optional[str] = None) -> Layout:
+        """Op-level layout: the assignment of the op's dominant (most
+        expensive) step.  With ``op=None`` the workload must have exactly
+        one op (the single-matmul dispatch convenience)."""
+        if op is None:
+            idxs = {s.op for s in self.steps}
+            if len(idxs) != 1:
+                raise ValueError(
+                    f"plan for {self.workload!r} has {len(idxs)} ops; "
+                    "name one (layout_for(op=...))")
+            steps = self.steps
+        else:
+            steps = self.steps_for(op)
+            if not steps:
+                known = ", ".join(dict.fromkeys(s.op for s in self.steps))
+                raise KeyError(f"plan for {self.workload!r} has no op "
+                               f"{op!r} (ops: {known})")
+        return max(steps, key=lambda s: s.cycles).layout
+
+    def op_schedule(self) -> list[tuple[str, str]]:
+        """[(op name, op-level layout value)] in topological order."""
+        seen: dict[str, None] = dict.fromkeys(s.op for s in self.steps)
+        return [(op, self.layout_for(op).value) for op in seen]
+
+    # ------------------------------------------------------ serialization
+    def to_dict(self, include_steps: bool = True) -> dict:
+        d = {
+            "workload": self.workload,
+            "geometry": self.geometry.to_dict(),
+            "total_cycles": self.total_cycles,
+            "static_bp": self.static_bp,
+            "static_bs": self.static_bs,
+            "hybrid_speedup": self.hybrid_speedup,
+            "is_hybrid": self.is_hybrid,
+            "feasible": self.feasible,
+            "n_transposes": self.n_transposes,
+            "transpose_cycles": self.transpose_cycles_total,
+            "initial_layout": (self.initial_layout.value
+                               if self.initial_layout else None),
+            "op_schedule": self.op_schedule(),
+        }
+        if include_steps:
+            d["steps"] = [
+                {"op": s.op, "phase": s.phase, "kind": s.kind,
+                 "layout": s.layout.value, "cycles": s.cycles,
+                 "feasible": s.feasible}
+                for s in self.steps]
+            d["transposes"] = [dataclasses.asdict(t)
+                               for t in self.transposes]
+        return d

@@ -1,0 +1,134 @@
+"""Lower a :class:`LayoutPlan` to executable micro-op programs and replay.
+
+The lowering contract (DESIGN.md Sec. 10):
+
+* ``kernel`` steps whose Table-5 kernel has a ``pim.programs`` builder
+  lower to the micro-op program of the *assigned* layout
+  (:func:`step_program`); replay runs that program functionally on the
+  simulated CSA (``pim.executor.execute``) and scales its static cycle
+  count by the capacity batches at the op's element count.
+* ``matmul``/``conv`` steps lower to the ``multu`` + ``vector_add``
+  MAC decomposition (the ``ExecutorBackend`` route) in the assigned
+  layout; the decomposition intentionally differs from the analytic
+  chunked-tree pricing, so these rows are informational, not differenced.
+* ``movement`` / bespoke ``compute`` steps have no micro-op program (bus
+  and hand-calibrated phases are modelled analytically only).
+
+``replay_plan`` is the predicted-vs-executed differ: for every
+executable kernel op it returns the planner's predicted compute cycles
+(the analytic formula at the plan's operating point) next to the
+executor-replayed cycles, plus the documented Sec.-8 calibration delta
+the pair is *expected* to show.  The acceptance gate (tests/test_plan.py)
+asserts ``executed - predicted == expected`` for all 13 executable
+Table-5 kernels in whichever layout the plan assigned.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.cost_model import Layout
+from repro.core.params import SystemParams, PAPER_SYSTEM
+from repro.plan.ir import LayoutPlan
+
+#: element count used for the functional replay arrays (cycle counts are
+#: static per program; batches scale them to the op's real n)
+_REPLAY_N = 64
+
+
+def _kernel_program(kernel: str, layout: Layout, width: int,
+                    n: Optional[int]):
+    from repro.pim import programs as pr
+
+    if (kernel, layout) not in pr.BUILDERS:
+        return None
+    n_eff = n if (kernel == "reduction" and layout is Layout.BP) else None
+    return pr.build(kernel, layout, width=width, n=n_eff)
+
+
+def step_program(plan: LayoutPlan, workload, step_index: int):
+    """The micro-op program for one plan step (None when not lowerable)."""
+    step = plan.steps[step_index]
+    op = workload.ops[step.op_index]
+    if op.kind != "kernel":
+        return None
+    return _kernel_program(op.kernel, step.layout, op.width, op.n)
+
+
+def plan_programs(plan: LayoutPlan, workload) -> list[tuple[int, object]]:
+    """All lowerable (step index, Program) pairs, in plan order."""
+    out = []
+    for i in range(len(plan.steps)):
+        prog = step_program(plan, workload, i)
+        if prog is not None:
+            out.append((i, prog))
+    return out
+
+
+def _batches(layout: Layout, n: int, width: int, sys: SystemParams) -> int:
+    return sys.bp_batches(n, width) if layout is Layout.BP \
+        else sys.bs_batches(n)
+
+
+def replay_plan(plan: LayoutPlan, workload,
+                sys: SystemParams = PAPER_SYSTEM, *,
+                execute: bool = True) -> list[dict]:
+    """Replay every executable op of the plan; return per-op records.
+
+    Each record: ``{op, kind, layout, predicted, executed, delta,
+    expected_delta, note}`` (cycle totals at the op's element count).
+    ``execute=False`` skips the functional array simulation and keeps the
+    static program cycle accounting (identical numbers, no jax work).
+    """
+    from repro.pim import programs as pr
+
+    rows: list[dict] = []
+    for op in workload.ops:
+        layout = plan.layout_for(op.name)
+        if op.kind == "kernel":
+            prog = _kernel_program(op.kernel, layout, op.width, op.n)
+            if prog is None:
+                continue
+            if execute:
+                from repro.pim.executor import execute as run, init_cells
+
+                # BP tree reduction bakes its element count into the
+                # program; everything else replays on a small array
+                run(prog, init_cells(prog,
+                                     prog.n or min(op.n, _REPLAY_N)))
+            batches = _batches(layout, op.n, op.width, sys)
+            predicted = pr.analytic_compute(op.kernel, layout, op.width,
+                                            n=op.n) * batches
+            executed = prog.cycles * batches
+            rows.append({
+                "op": op.name, "kind": op.kind, "layout": layout.value,
+                "predicted": predicted, "executed": executed,
+                "delta": executed - predicted,
+                "expected_delta": prog.expected_delta * batches,
+                "note": prog.calibration_note,
+            })
+        elif op.kind in ("matmul", "conv"):
+            outs = op.m * op.n if op.kind == "matmul" else op.n
+            mult = pr.build("multu", layout, width=op.width)
+            add = pr.build("vector_add", layout, width=2 * op.width)
+            if execute:
+                from repro.pim.executor import execute as run, init_cells
+
+                run(mult, init_cells(mult, _REPLAY_N))
+            batches = _batches(layout, outs, op.width, sys)
+            executed = (op.k * mult.cycles
+                        + (op.k - 1) * add.cycles) * batches
+            rows.append({
+                "op": op.name, "kind": op.kind, "layout": layout.value,
+                "predicted": None, "executed": executed,
+                "delta": None, "expected_delta": None,
+                "note": "MAC decomposition (multu + vector_add); priced "
+                        "analytically as a chunked tree -- not differenced",
+            })
+    return rows
+
+
+def replay_matches(rows: list[dict]) -> bool:
+    """True when every differenced row shows exactly its documented
+    Sec.-8 calibration delta."""
+    return all(r["delta"] == r["expected_delta"] for r in rows
+               if r["predicted"] is not None)

@@ -11,8 +11,10 @@ Every backend answers the same question -- "what does this workload cost?"
 * :class:`AnalyticBackend`  -- the paper's closed-form cycle model
   (``core.cost_model`` / ``core.microkernels``): per-op
   load/compute/readout in both static layouts.
-* :class:`PlannerBackend`   -- lowers ops to planner phases and runs the
-  2-state hybrid DP (``core.planner``): BP/BS/hybrid + schedule.
+* :class:`PlannerBackend`   -- compiles the workload DAG into an
+  executable ``repro.plan`` LayoutPlan (per-step BP/BS assignment with
+  explicit transposes; chains == the legacy 2-state DP bit-for-bit):
+  BP/BS/hybrid + schedule, optional executor replay (``execute=True``).
 * :class:`ExecutorBackend`  -- lowers ops to ``repro.pim.programs``
   micro-op programs where available and reports *executed* cycle counts;
   matmul/conv MACs decompose into ``multu`` + ``vector_add`` programs.
@@ -35,7 +37,7 @@ from typing import Optional, Protocol, Union, runtime_checkable
 
 from repro.core.cost_model import Layout
 from repro.core.params import SystemParams, PAPER_SYSTEM
-from repro.workloads.ir import Op, Workload, op_cost, op_phases
+from repro.workloads.ir import Op, Workload, op_cost
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,30 +187,57 @@ class AnalyticBackend(_SequentialEstimateMany):
 # ---------------------------------------------------------------------------
 
 class PlannerBackend(_SequentialEstimateMany):
-    """Lower to planner phases, run the 2-state hybrid DP."""
+    """Compile the workload DAG into an executable ``repro.plan``
+    :class:`~repro.plan.ir.LayoutPlan` (per-step BP/BS assignment with
+    explicit transposes at layout boundaries; linear chains reproduce the
+    legacy 2-state DP bit-for-bit).
+
+    ``execute=True`` additionally lowers the plan's executable ops to
+    their ``pim.programs`` micro-op programs in the *assigned* layout and
+    replays them on the simulated-array executor; the predicted (analytic)
+    vs executed cycle pairs land in ``Report.notes`` (deltas must equal
+    the documented Sec.-8 calibration catalogue).
+    """
 
     name = "planner"
+
+    def __init__(self, execute: bool = False):
+        self.execute = execute
 
     def supports(self, workload: Workload) -> bool:
         return True
 
     def estimate(self, workload: Workload,
                  sys: SystemParams = PAPER_SYSTEM) -> Report:
-        from repro.core.planner import plan
+        from repro.plan import compile_plan, replay_plan
 
-        phase_groups = [op_phases(op, sys) for op in workload.ops]
-        phases = [p for grp in phase_groups for p in grp]
-        p = plan(phases, sys)
-        rows = []
-        i = 0
-        for op, grp in zip(workload.ops, phase_groups):
-            layouts = p.schedule[i:i + len(grp)]
-            i += len(grp)
+        p = compile_plan(workload, sys)
+        rows, notes = [], []
+        for oi, op in enumerate(workload.ops):
+            steps = [s for s in p.steps if s.op_index == oi]
             rows.append(OpReport(
                 op=op.name, kind=op.kind,
-                bp_cycles=sum(ph.bp_cycles for ph in grp),
-                bs_cycles=sum(ph.bs_cycles for ph in grp),
-                note="sched=" + "/".join(l.value for l in layouts)))
+                bp_cycles=sum(s.bp_cycles for s in steps),
+                bs_cycles=sum(s.bs_cycles for s in steps),
+                note="sched=" + "/".join(s.layout.value for s in steps)))
+        if not p.feasible:
+            bad = p.infeasible_steps
+            notes.append(
+                f"{len(bad)} step(s) overflow the {p.geometry.label()} "
+                "row budget in their assigned layout (modelled via "
+                f"explicit spills): {', '.join(s.phase for s in bad[:4])}"
+                + (" ..." if len(bad) > 4 else ""))
+        if self.execute:
+            for r in replay_plan(p, workload, sys):
+                if r["predicted"] is None:
+                    notes.append(f"replay {r['op']} [{r['layout']}]: "
+                                 f"executed={r['executed']} ({r['note']})")
+                else:
+                    notes.append(
+                        f"replay {r['op']} [{r['layout']}]: "
+                        f"predicted={r['predicted']} "
+                        f"executed={r['executed']} delta={r['delta']:+d} "
+                        f"(expected {r['expected_delta']:+d})")
         return Report(
             workload=workload.name, backend=self.name, ops=tuple(rows),
             summary={
@@ -220,7 +249,8 @@ class PlannerBackend(_SequentialEstimateMany):
                 "n_transposes": p.n_transposes,
                 "transpose_cycles": p.transpose_cycles_total,
                 "best_static_layout": p.best_static_layout.value,
-            })
+            },
+            notes=tuple(notes))
 
 
 # ---------------------------------------------------------------------------
@@ -330,7 +360,8 @@ class PallasBackend(_SequentialEstimateMany):
     kernel vs BS bitplane kernel at the op's weight precision, capped at
     8 plane passes).  Dims are clamped to ``tile`` to keep interpret-mode
     CPU runs bounded; the measured quantity is the per-tile latency, not
-    the full op."""
+    the full op.  Timings are the median of 5 post-warmup reps with
+    ``block_until_ready`` (never a single cold wall-clock sample)."""
 
     name = "pallas"
 
@@ -348,14 +379,16 @@ class PallasBackend(_SequentialEstimateMany):
         else:
             m, k, n = op.m, op.k, op.n
         clamp = lambda d: max(32, min(t, d))
-        # bitpack requires K % 32 == 0
-        return clamp(m), max(32, clamp(k) // 32 * 32), clamp(n)
+        # bitpack zero-pads K to a multiple of 32 itself; no rounding here
+        return clamp(m), clamp(k), clamp(n)
 
     def estimate(self, workload: Workload,
                  sys: SystemParams = PAPER_SYSTEM) -> Report:
+        import statistics
         import time
 
         import numpy as np
+        import jax
         import jax.numpy as jnp
 
         from repro.kernels import ops as kops
@@ -366,11 +399,16 @@ class PallasBackend(_SequentialEstimateMany):
         tot_bp = tot_bs = 0.0
         measured = 0
 
-        def clock(fn):
-            fn()  # warmup / compile
-            t0 = time.perf_counter()
-            fn()
-            return (time.perf_counter() - t0) * 1e6
+        def clock(fn, reps: int = 5):
+            """Median of `reps` timed calls after a compile/warmup call;
+            `block_until_ready` keeps async dispatch out of the sample."""
+            jax.block_until_ready(fn())  # warmup / compile
+            samples = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                samples.append((time.perf_counter() - t0) * 1e6)
+            return statistics.median(samples)
 
         for op in workload.ops:
             if op.kind not in ("matmul", "conv"):
@@ -385,11 +423,10 @@ class PallasBackend(_SequentialEstimateMany):
             w = jnp.asarray(rng.integers(0, 2 ** bits, (k, n),
                                          dtype=np.uint32))
             planes = kops.pack_weights(w, bits, interpret=self.interpret)
-            bp_us = clock(lambda: np.asarray(
-                kops.matmul_bp(x, w.astype(jnp.int8),
-                               interpret=self.interpret)))
-            bs_us = clock(lambda: np.asarray(
-                kops.matmul_bs(x, planes, interpret=self.interpret)))
+            bp_us = clock(lambda: kops.matmul_bp(
+                x, w.astype(jnp.int8), interpret=self.interpret))
+            bs_us = clock(lambda: kops.matmul_bs(
+                x, planes, interpret=self.interpret))
             rec = kops.choose_layout(weight_bits=bits, m=op.m or m,
                                      n=op.n or n, k=op.k or k)
             rows.append(OpReport(

@@ -245,16 +245,43 @@ def op_phases(op: Op, sys: SystemParams = PAPER_SYSTEM) -> list[Phase]:
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
-    """A DAG-ordered op sequence plus provenance metadata."""
+    """A DAG-ordered op sequence plus provenance metadata.
+
+    ``deps`` are explicit dependence edges ``(producer, consumer)`` over
+    op indices; empty means the default linear chain (op *i* feeds op
+    *i+1*).  List order must stay a topological order either way -- the
+    invariant every consumer (the 2-state planner, ``repro.plan``'s DAG
+    scheduler, the executor lowering) relies on, so edges must point
+    forward (``producer < consumer``).
+    """
 
     name: str
     ops: tuple[Op, ...]
     source: str = "table6"  # "table5" | "table6" | "arch"
     description: str = ""
+    #: explicit DAG edges over op indices; () = linear chain
+    deps: tuple[tuple[int, int], ...] = ()
 
     def __post_init__(self):
         if not self.ops:
             raise ValueError(f"workload {self.name!r} has no ops")
+        for a, b in self.deps:
+            if not (0 <= a < b < len(self.ops)):
+                raise ValueError(
+                    f"workload {self.name!r}: bad dep edge ({a}, {b}) -- "
+                    f"need 0 <= producer < consumer < {len(self.ops)} "
+                    "(list order is the topological order)")
+        if len(set(self.deps)) != len(self.deps):
+            dupes = sorted({e for e in self.deps if self.deps.count(e) > 1})
+            raise ValueError(
+                f"workload {self.name!r}: duplicate dep edge(s) {dupes} "
+                "would double-charge the boundary transpose")
+
+    def edges(self) -> tuple[tuple[int, int], ...]:
+        """Dependence edges: ``deps`` if given, else the linear chain."""
+        if self.deps:
+            return self.deps
+        return tuple((i, i + 1) for i in range(len(self.ops) - 1))
 
     def to_phases(self, sys: SystemParams = PAPER_SYSTEM) -> list[Phase]:
         """Lower to the planner's phase sequence (hybrid-DP input).
@@ -278,6 +305,7 @@ class Workload:
 
 
 def workload(name: str, ops: Sequence[Op], source: str = "table6",
-             description: str = "") -> Workload:
+             description: str = "",
+             deps: Sequence[tuple[int, int]] = ()) -> Workload:
     return Workload(name=name, ops=tuple(ops), source=source,
-                    description=description)
+                    description=description, deps=tuple(deps))

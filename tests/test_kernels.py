@@ -5,7 +5,7 @@ import numpy as np
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
-from repro.kernels.bitpack import bitpack
+from repro.kernels.bitpack import bitpack, bitunpack
 from repro.kernels.bitparallel_matmul import bitparallel_matmul
 from repro.kernels.bitserial_matmul import bitserial_matmul
 from repro.kernels.flash_attention import flash_attention
@@ -36,6 +36,30 @@ def test_bitpack_roundtrip():
     planes = bitpack(w, 4)
     back = ref.bitunpack_ref(planes, 128)
     np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.sampled_from([1, 3, 8]),
+       k=st.sampled_from([1, 17, 40, 63, 65]), n=st.sampled_from([8, 64]))
+def test_bitpack_pads_ragged_k_and_unpack_strips(bits, k, n):
+    """ISSUE-5 satellite: K need not be a multiple of 32 -- the packer
+    zero-pads, bitunpack strips the padding, and the padded planes feed
+    the BS matmul unchanged (zero rows contribute nothing)."""
+    rng = np.random.default_rng(bits * 1000 + k * 10 + n)
+    w = _rand_words(rng, k, n, bits)
+    planes = bitpack(w, bits)
+    assert planes.shape == (bits, -(-k // 32), n)
+    back = bitunpack(planes, k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+    # padded rows really are zero
+    full = np.asarray(bitunpack(planes))
+    assert not full[k:].any()
+    # ragged-K matmul through the padded planes == integer reference
+    m = 8
+    x = jnp.asarray(rng.integers(-8, 8, size=(m, k), dtype=np.int32))
+    got = ops.matmul_bs(x.astype(jnp.int8), planes)
+    want = np.asarray(x) @ np.asarray(w).astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(got), want)
 
 
 # -------------------------------------------------- bit-serial matmul ------
