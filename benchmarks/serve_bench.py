@@ -1,0 +1,84 @@
+"""Serving-path benchmarks + oracle rows.
+
+Rows:
+
+* ``serve.plan_service``   -- per-request plan compilation through the
+  content-addressed cache: cold pass then warm pass over one traffic
+  sample; derived reports the warm hit rate (oracle: warm pass is 100%
+  cache-served).
+* ``serve.batch_amortize`` -- oracle: phase-grouped batching never loses
+  (``transpose_cycles_saved >= 0`` and group latency <= the worst
+  ungrouped member) and every group's members share one signature.
+* ``serve.bench_scenario`` -- one in-process ``run_serve_bench`` pass
+  (quick: 128 requests, full: 1024); derived carries throughput and the
+  cache hit rate.
+
+All backends are resolved through ``repro.workloads.get_backend`` -- the
+benches construct no backend classes directly.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, quick, time_us
+
+
+def _n_requests() -> int:
+    return 128 if quick() else 1024
+
+
+def bench_plan_service():
+    from repro.serve import PlanCache, PlanService, TrafficMix
+
+    cache = PlanCache(persist=False)
+    service = PlanService(cache=cache)
+    requests = TrafficMix.default().sample(_n_requests(), seed=0)
+    service.compile_many(requests)          # cold: fills the cache
+    cold_rate = cache.hit_rate
+    cold_misses = cache.misses
+
+    def warm():
+        service.compile_many(requests)
+
+    us = time_us(warm)
+    warm_ok = cache.misses == cold_misses   # warm passes are 100% served
+    us_per_req = us / len(requests)
+    return [emit("serve.plan_service", us_per_req,
+                 f"requests={len(requests)};cold_hit_rate={cold_rate:.3f};"
+                 f"warm_all_hit={warm_ok};match={warm_ok}")]
+
+
+def bench_batch_amortize():
+    from repro.serve import PhaseBatcher, PlanService, TrafficMix
+
+    service = PlanService(persist=False)
+    compiled = service.compile_many(
+        TrafficMix.default().sample(_n_requests(), seed=1))
+    groups = PhaseBatcher(max_batch=32).group(compiled)
+    ok = True
+    for g in groups:
+        ok &= all(m.signature == g.signature for m in g.members)
+        ok &= g.transpose_cycles_saved >= 0
+        worst_alone = max(
+            (c + t for c, t in zip(g.member_compute_cycles(),
+                                   g.member_transpose_cycles())),
+            default=0)
+        ok &= g.latency_cycles <= worst_alone + g.amortized_transpose_cycles
+    saved = sum(g.transpose_cycles_saved for g in groups)
+    return [emit("serve.batch_amortize", 0.0,
+                 f"groups={len(groups)};saved_cycles={saved};match={ok}")]
+
+
+def bench_scenario():
+    import tempfile
+
+    from repro.serve import run_serve_bench
+
+    with tempfile.TemporaryDirectory() as d:
+        payload = run_serve_bench(_n_requests(), seed=0, cache_dir=d)
+    return [emit("serve.bench_scenario",
+                 payload["elapsed_s"] * 1e6 / payload["requests"],
+                 f"requests={payload['requests']};"
+                 f"hit_rate={payload['cache']['hit_rate']:.3f};"
+                 f"rps={payload['throughput_rps']:.0f}")]
+
+
+ALL = [bench_plan_service, bench_batch_amortize, bench_scenario]

@@ -26,8 +26,21 @@ Subcommands:
 * ``guidelines``    -- print the machine-derived layout guidelines
                        (crossover table + rules + hybrid-win set) and
                        write ``bench-artifacts/guidelines.json``.
+* ``serve-bench``   -- layout-aware serving at scale: replay thousands of
+                       simulated concurrent requests from the arch traffic
+                       mix through per-request plan compilation
+                       (content-addressed plan cache) and phase-grouped
+                       continuous batching; p50/p99 plan-compile and
+                       execute latencies plus cache counters land in
+                       ``bench-artifacts/serve.json``.  ``--baseline``
+                       gates p99 execute latency against a committed
+                       artifact (the CI bench-smoke regression check).
 * ``tables``        -- the model-reproduced paper tables (the golden
                        snapshot text; see tests/golden/paper_tables.txt).
+
+Committed artifacts (characterize.json, plans.json, serve.json) share the
+versioned ``repro.artifacts`` envelope:
+``{"artifact": kind, "schema_version": N, "payload": ...}``.
 
 Examples::
 
@@ -41,11 +54,12 @@ Examples::
     python -m repro plan --quick
     python -m repro sweep --widths 4,8,16,32
     python -m repro guidelines
+    python -m repro serve-bench --requests 4096
+    python -m repro serve-bench --quick --baseline bench-artifacts/serve.json
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import sys
@@ -123,11 +137,16 @@ def _parse_geometry(text):
 
 def cmd_characterize(args) -> int:
     from repro.core.params import PAPER_SYSTEM
-    from repro.workloads import characterize, workload_names
+    from repro.workloads import backend_names, characterize, workload_names
 
     spec = args.backends or ("analytic,planner,executor" if args.quick
                              else "analytic,planner")
     backends = [b.strip() for b in spec.split(",") if b.strip()]
+    unknown = [b for b in backends if b not in backend_names()]
+    if unknown:
+        print(f"error: unknown backend(s) {', '.join(unknown)} "
+              f"(registered: {', '.join(backend_names())})", file=sys.stderr)
+        return 2
     names = list(args.workloads)
     if args.quick and not names:
         # CI smoke scope: the analytic registries (arch/ workloads need
@@ -147,13 +166,13 @@ def cmd_characterize(args) -> int:
             _print_report(rep, show_ops=args.ops)
         artifact[name] = {b: rep.summary for b, rep in reports.items()}
         if args.json:
-            full[name] = {b: dataclasses.asdict(rep)
-                          for b, rep in reports.items()}
+            full[name] = {b: rep.to_dict() for b, rep in reports.items()}
     if args.quick:
-        os.makedirs(_artifact_dir(), exist_ok=True)
+        from repro.artifacts import write_artifact
+
         path = os.path.join(_artifact_dir(), "characterize.json")
-        with open(path, "w") as f:
-            json.dump(artifact, f, indent=1, sort_keys=True)
+        write_artifact(path, "characterize", artifact,
+                       generated_by="python -m repro characterize --quick")
         print(f"\n# wrote per-workload per-backend summaries to {path}")
     if args.json:
         with open(args.json, "w") as f:
@@ -216,10 +235,11 @@ def cmd_plan(args) -> int:
                           f"(expected {r['expected_delta']:+d}) {ok}")
         artifact[name] = d
     if args.quick:
-        os.makedirs(_artifact_dir(), exist_ok=True)
+        from repro.artifacts import write_artifact
+
         path = os.path.join(_artifact_dir(), "plans.json")
-        with open(path, "w") as f:
-            json.dump(artifact, f, indent=1, sort_keys=True)
+        write_artifact(path, "plans", artifact,
+                       generated_by="python -m repro plan --quick")
         print(f"\n# wrote per-workload plan summaries to {path}")
     if args.json:
         with open(args.json, "w") as f:
@@ -296,6 +316,68 @@ def cmd_guidelines(args) -> int:
     with open(gpath, "w") as f:
         json.dump(g, f, indent=1, sort_keys=True)
     print(f"\n# wrote {gpath}")
+    return 0
+
+
+def cmd_serve_bench(args) -> int:
+    from repro.artifacts import ArtifactError, read_artifact, write_artifact
+    from repro.core.params import PAPER_SYSTEM
+    from repro.serve import check_regression, run_serve_bench
+
+    n = args.requests if args.requests else (1024 if args.quick else 2048)
+    system = (_parse_geometry(args.geometry) if args.geometry
+              else PAPER_SYSTEM)
+
+    # read the baseline BEFORE the run: the committed artifact and this
+    # run's output default to the same path (CI gates in place)
+    baseline = None
+    if args.baseline:
+        try:
+            baseline = read_artifact(args.baseline, "serve")
+        except FileNotFoundError:
+            print(f"# no baseline at {args.baseline}; gate skipped")
+        except ArtifactError as e:
+            print(f"error: bad baseline: {e}", file=sys.stderr)
+            return 2
+
+    payload = run_serve_bench(
+        n, seed=args.seed, sys=system,
+        cache_dir=args.cache_dir or None, persist=not args.no_cache,
+        max_batch=args.max_batch)
+
+    cache = payload["cache"]
+    comp, execu = payload["plan_compile_us"], payload["execute_us"]
+    print(f"serve-bench: {n} requests, "
+          f"{payload['distinct_plans_bound']} distinct operating points, "
+          f"{payload['batches']['count']} batches "
+          f"({payload['batches']['signatures']} layout phases), "
+          f"{payload['mesh_devices']} device(s)")
+    print(f"  plan cache: {cache['hits']}/{cache['lookups']} served "
+          f"(hit_rate={cache['hit_rate']:.3f} mem={cache['mem_hits']} "
+          f"disk={cache['disk_hits']} miss={cache['misses']} "
+          f"evict={cache['evictions']})")
+    print(f"  plan compile: p50={comp['p50']:.0f}us p99={comp['p99']:.0f}us")
+    print(f"  execute:      p50={execu['p50']:.0f}us p99={execu['p99']:.0f}us")
+    print(f"  throughput: {payload['throughput_rps']:.0f} req/s; "
+          f"transposes amortized: "
+          f"{payload['simulated']['transpose_cycles_saved']} cycles saved")
+
+    path = os.path.join(_artifact_dir(), "serve.json")
+    write_artifact(path, "serve", payload,
+                   generated_by="python -m repro serve-bench")
+    print(f"# wrote {path}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote full payload to {args.json}")
+
+    if baseline is not None:
+        ok, msg = check_regression(payload, baseline,
+                                   threshold=args.regress_threshold,
+                                   floor_us=args.regress_floor_us)
+        print(f"# regression gate: {msg} -> {'OK' if ok else 'FAIL'}")
+        if not ok:
+            return 3
     return 0
 
 
@@ -388,6 +470,43 @@ def main(argv=None) -> int:
     p_guide.add_argument("--no-cache", action="store_true",
                          help="skip the sweep-cache (force re-evaluation)")
     p_guide.set_defaults(fn=cmd_guidelines)
+
+    p_serve = sub.add_parser(
+        "serve-bench",
+        help="replay the arch traffic mix through per-request plan "
+             "compilation, the content-addressed plan cache, and "
+             "phase-grouped batching")
+    p_serve.add_argument("--requests", type=int, default=0, metavar="N",
+                         help="simulated concurrent requests "
+                              "(default 2048; --quick default 1024)")
+    p_serve.add_argument("--seed", type=int, default=0,
+                         help="traffic-mix sampling seed")
+    p_serve.add_argument("--quick", action="store_true",
+                         help="CI smoke: 1024 requests (unless --requests)")
+    p_serve.add_argument("--geometry", default=None, metavar="RxCxA[@BW]",
+                         help="system geometry rows x cols x arrays "
+                              "(optional @row-bus-bits), e.g. 128x512x64")
+    p_serve.add_argument("--max-batch", type=int, default=64,
+                         help="continuous-batching slot budget per group")
+    p_serve.add_argument("--cache-dir", default=None, metavar="DIR",
+                         help="plan-cache directory (default "
+                              "<artifact-dir>/plan-cache)")
+    p_serve.add_argument("--no-cache", action="store_true",
+                         help="disable the disk tier of the plan cache")
+    p_serve.add_argument("--baseline", default=None, metavar="PATH",
+                         help="committed serve.json to gate p99 execute "
+                              "latency against (read before this run's "
+                              "artifact is written)")
+    p_serve.add_argument("--regress-threshold", type=float, default=0.25,
+                         help="p99 execute-latency regression budget "
+                              "(fraction over baseline; default 0.25)")
+    p_serve.add_argument("--regress-floor-us", type=float, default=250.0,
+                         help="timer-noise floor: baselines are clamped "
+                              "up to this before the ratio, so sub-floor "
+                              "p99s never gate (default 250)")
+    p_serve.add_argument("--json", default=None, metavar="PATH",
+                         help="dump the full payload (pre-envelope) as JSON")
+    p_serve.set_defaults(fn=cmd_serve_bench)
 
     p_tab = sub.add_parser("tables", help="model-reproduced paper tables")
     p_tab.set_defaults(fn=cmd_tables)

@@ -1,0 +1,79 @@
+"""Versioned bench-artifact envelope: one schema for every committed file.
+
+Every committed bench artifact (``bench-artifacts/characterize.json``,
+``plans.json``, ``serve.json``) used to be a bespoke top-level layout;
+consumers had to know three shapes.  They now share one envelope::
+
+    {
+      "artifact": "<kind>",          # "characterize" | "plans" | "serve"
+      "schema_version": 1,           # REPORT_SCHEMA_VERSION
+      "generated_by": "python -m repro <cmd>",
+      "payload": { ... }             # the kind-specific content
+    }
+
+``payload`` entries that describe backend results are
+``repro.workloads.Report.to_dict()`` summaries (same version number), so
+one reader handles all artifacts: ``read_artifact(path, kind)`` validates
+the envelope and returns the payload.
+
+The version is bumped on breaking payload-shape changes; readers refuse
+artifacts newer than themselves and accept older ones.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.workloads.backends import REPORT_SCHEMA_VERSION
+
+
+class ArtifactError(ValueError):
+    """Envelope mismatch: wrong kind, missing fields, or a newer schema."""
+
+
+def envelope(kind: str, payload, generated_by: str = "") -> dict:
+    return {
+        "artifact": kind,
+        "schema_version": REPORT_SCHEMA_VERSION,
+        "generated_by": generated_by,
+        "payload": payload,
+    }
+
+
+def write_artifact(path: str, kind: str, payload,
+                   generated_by: str = "") -> str:
+    """Write ``payload`` under the versioned envelope; returns ``path``."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(envelope(kind, payload, generated_by), f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def read_artifact(path: str, kind: Optional[str] = None):
+    """Validate the envelope at ``path`` and return its payload.
+
+    ``kind=None`` accepts any artifact kind (the caller can inspect the
+    envelope itself via :func:`read_envelope`).
+    """
+    env = read_envelope(path)
+    if kind is not None and env["artifact"] != kind:
+        raise ArtifactError(
+            f"{path}: artifact kind {env['artifact']!r}, expected {kind!r}")
+    return env["payload"]
+
+
+def read_envelope(path: str) -> dict:
+    with open(path) as f:
+        env = json.load(f)
+    missing = {"artifact", "schema_version", "payload"} - set(env)
+    if missing:
+        raise ArtifactError(f"{path}: not a bench artifact envelope "
+                            f"(missing {sorted(missing)})")
+    if env["schema_version"] > REPORT_SCHEMA_VERSION:
+        raise ArtifactError(
+            f"{path}: schema v{env['schema_version']} is newer than this "
+            f"reader (v{REPORT_SCHEMA_VERSION})")
+    return env

@@ -172,10 +172,42 @@ class LayoutPlan:
         }
         if include_steps:
             d["steps"] = [
-                {"op": s.op, "phase": s.phase, "kind": s.kind,
+                {"index": s.index, "op": s.op, "op_index": s.op_index,
+                 "phase": s.phase, "kind": s.kind,
                  "layout": s.layout.value, "cycles": s.cycles,
+                 "bp_cycles": s.bp_cycles, "bs_cycles": s.bs_cycles,
+                 "rows_bp": s.rows_bp, "rows_bs": s.rows_bs,
+                 "bp_feasible": s.bp_feasible,
+                 "bs_feasible": s.bs_feasible,
                  "feasible": s.feasible}
                 for s in self.steps]
             d["transposes"] = [dataclasses.asdict(t)
                                for t in self.transposes]
         return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LayoutPlan":
+        """Rebuild a plan from a full ``to_dict(include_steps=True)`` dump
+        (the serving plan-cache disk format; round-trip pinned in
+        tests/test_serve.py).  Summary-only dumps cannot round-trip."""
+        if "steps" not in d:
+            raise ValueError(
+                f"plan dump for {d.get('workload')!r} has no steps "
+                "(serialized with include_steps=False?) -- cannot rebuild")
+        steps = tuple(
+            PlanStep(index=s["index"], op=s["op"], op_index=s["op_index"],
+                     phase=s["phase"], kind=s["kind"],
+                     layout=Layout(s["layout"]),
+                     bp_cycles=s["bp_cycles"], bs_cycles=s["bs_cycles"],
+                     rows_bp=s["rows_bp"], rows_bs=s["rows_bs"],
+                     bp_feasible=s["bp_feasible"],
+                     bs_feasible=s["bs_feasible"])
+            for s in d["steps"])
+        transposes = tuple(TransposeStep(**t) for t in d["transposes"])
+        init = d.get("initial_layout")
+        return cls(
+            workload=d["workload"], geometry=Geometry(**d["geometry"]),
+            steps=steps, transposes=transposes,
+            total_cycles=d["total_cycles"], static_bp=d["static_bp"],
+            static_bs=d["static_bs"],
+            initial_layout=Layout(init) if init else None)

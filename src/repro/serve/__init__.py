@@ -1,1 +1,37 @@
-"""serve subpackage of the repro framework."""
+"""repro.serve: layout-aware serving (plans, cache, batching, decode).
+
+Public surface (see README.md in this directory and DESIGN.md Sec. 11)::
+
+    from repro.serve import (
+        ServeSession,                    # model-zoo prefill+decode
+        Request, TrafficMix,             # simulated serving traffic
+        PlanService, CompiledRequest,    # per-request plan compilation
+        PlanCache, plan_key,             # content-addressed plan cache
+        PhaseBatcher, BatchGroup,        # phase-grouped continuous batching
+        run_serve_bench,                 # the serve-bench scenario
+    )
+
+CLI: ``python -m repro serve-bench [--quick]`` replays the arch traffic
+mix and commits ``bench-artifacts/serve.json``.
+
+``ServeSession`` (the jax model-zoo decoder) imports jax at module load;
+it is exposed lazily so the plan/cache/traffic layers stay importable on
+the analytic-only stack.
+"""
+from repro.serve.batcher import BatchGroup, PhaseBatcher  # noqa: F401
+from repro.serve.bench import check_regression, run_serve_bench  # noqa: F401
+from repro.serve.plan_cache import (  # noqa: F401
+    PlanCache,
+    plan_key,
+    scheduler_fingerprint,
+)
+from repro.serve.service import CompiledRequest, PlanService  # noqa: F401
+from repro.serve.traffic import Request, TrafficMix, arch_ids  # noqa: F401
+
+
+def __getattr__(name):
+    if name == "ServeSession":
+        from repro.serve.decode import ServeSession
+
+        return ServeSession
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,187 @@
+"""Continuous batching of decode steps by shared layout phase.
+
+Phase-grouping rule (DESIGN.md Sec. 11): two requests batch together iff
+their compiled plans have the *identical per-step layout sequence*
+(``CompiledRequest.signature``).  Members of a group are then in the same
+layout at every boundary, so each boundary transpose runs **once per
+group** on the shared transpose unit -- the batch stages every member's
+operands through the same read(M)+core+write(N) pass -- instead of once
+per request.  The amortized charge is the widest member's transpose total
+(``max``), and the saving is ``sum - max``.
+
+Simulated accounting (exact, host integers):
+
+* ``latency_cycles``  = max member compute + amortized transposes
+  (members decode in parallel across the machine's arrays);
+* ``machine_cycles``  = sum member compute + amortized transposes
+  (the throughput/occupancy charge).
+
+``execute`` additionally runs the same reduction *on device* -- one jitted
+call per group, the member axis sharded over ``repro.dist`` data axes
+(``shard(cycles, "batch", None)``; a no-op off-mesh) -- and that call's
+wall-clock is serve-bench's per-request execute latency.  Device math is
+float32 (cycle counts can exceed int32), so artifact cycle totals always
+come from the exact host integers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.serve.service import CompiledRequest
+
+
+@dataclasses.dataclass
+class BatchGroup:
+    """Requests whose plans share one layout-phase signature."""
+
+    signature: tuple[str, ...]
+    members: list[CompiledRequest]
+
+    #: wall-clock of the device step (filled by ``execute``)
+    execute_us: Optional[float] = None
+
+    @property
+    def size(self) -> int:
+        return len(self.members)
+
+    # ------------------------------------------------- exact host totals
+    def member_compute_cycles(self) -> list[int]:
+        """Per-member assigned-layout cycles, transposes excluded."""
+        return [sum(s.cycles for s in m.plan.steps) for m in self.members]
+
+    def member_transpose_cycles(self) -> list[int]:
+        return [m.plan.transpose_cycles_total for m in self.members]
+
+    @property
+    def amortized_transpose_cycles(self) -> int:
+        """One shared pass per boundary, sized by the widest member."""
+        return max(self.member_transpose_cycles(), default=0)
+
+    @property
+    def transpose_cycles_saved(self) -> int:
+        tr = self.member_transpose_cycles()
+        return sum(tr) - (max(tr) if tr else 0)
+
+    @property
+    def latency_cycles(self) -> int:
+        return max(self.member_compute_cycles(), default=0) \
+            + self.amortized_transpose_cycles
+
+    @property
+    def machine_cycles(self) -> int:
+        return sum(self.member_compute_cycles()) \
+            + self.amortized_transpose_cycles
+
+
+class PhaseBatcher:
+    """Group compiled requests by layout-phase signature and execute each
+    group as one batched, mesh-sharded decode step."""
+
+    def __init__(self, max_batch: int = 64, mesh=None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1 (got {max_batch})")
+        self.max_batch = max_batch
+        self.mesh = mesh
+
+    # ------------------------------------------------------------- group
+    def group(self, compiled: Sequence[CompiledRequest]
+              ) -> list[BatchGroup]:
+        """Stable grouping: arrival order within a group is preserved and
+        groups emit in first-arrival order; oversize groups split at
+        ``max_batch`` (the continuous-batching slot budget)."""
+        by_sig: dict[tuple[str, ...], list[CompiledRequest]] = {}
+        for c in compiled:
+            by_sig.setdefault(c.signature, []).append(c)
+        out = []
+        for sig, members in by_sig.items():
+            for i in range(0, len(members), self.max_batch):
+                out.append(BatchGroup(signature=sig,
+                                      members=members[i:i + self.max_batch]))
+        return out
+
+    # ----------------------------------------------------------- execute
+    def execute(self, group: BatchGroup, warmup: bool = True) -> dict:
+        """Run the group's batched decode-step reduction on device and
+        record its wall-clock on the group (``execute_us``)."""
+        import jax
+
+        from repro.dist.sharding import use_mesh
+
+        step_cycles = np.zeros((group.size, len(group.signature)),
+                               np.float32)
+        for b, m in enumerate(group.members):
+            for s_i, s in enumerate(m.plan.steps):
+                step_cycles[b, s_i] = float(s.cycles)
+        transposes = np.asarray(group.member_transpose_cycles(), np.float32)
+        # pad the member axis to a power of two: bounds the number of
+        # retraces AND gives the mesh's data axes an even divisor
+        b_pad = 1
+        while b_pad < group.size:
+            b_pad *= 2
+        pad = b_pad - group.size
+        if pad:
+            step_cycles = np.pad(step_cycles, ((0, pad), (0, 0)))
+            transposes = np.pad(transposes, (0, pad))
+        mask = np.arange(b_pad) < group.size
+
+        with use_mesh(self.mesh):
+            if warmup:  # compile outside the timed window
+                jax.block_until_ready(
+                    _batched_step(step_cycles, transposes, mask))
+            t0 = time.perf_counter()
+            latency, machine = jax.block_until_ready(
+                _batched_step(step_cycles, transposes, mask))
+            group.execute_us = (time.perf_counter() - t0) * 1e6
+
+        return {
+            "size": group.size,
+            "execute_us": group.execute_us,
+            "device_latency_cycles": float(latency),
+            "device_machine_cycles": float(machine),
+            "latency_cycles": group.latency_cycles,
+            "machine_cycles": group.machine_cycles,
+            "transpose_cycles_saved": group.transpose_cycles_saved,
+        }
+
+    def run(self, compiled: Sequence[CompiledRequest]
+            ) -> tuple[list[BatchGroup], list[dict]]:
+        groups = self.group(compiled)
+        return groups, [self.execute(g) for g in groups]
+
+
+def _make_batched_step():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.sharding import shard
+
+    @jax.jit
+    def step(step_cycles, transposes, mask):
+        step_cycles = shard(step_cycles, "batch", None)
+        transposes = shard(transposes, "batch")
+        per_member = jnp.where(mask, step_cycles.sum(axis=1), 0.0)
+        tr = jnp.where(mask, transposes, 0.0)
+        amortized = tr.max()               # one shared pass per boundary
+        latency = per_member.max() + amortized
+        machine = per_member.sum() + amortized
+        return latency, machine
+
+    return step
+
+
+class _LazyStep:
+    """Defer jax import (and jit construction) to first execution."""
+
+    _fn = None
+
+    def __call__(self, *args):
+        if _LazyStep._fn is None:
+            _LazyStep._fn = _make_batched_step()
+        return _LazyStep._fn(*args)
+
+
+_batched_step = _LazyStep()

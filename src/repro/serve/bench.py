@@ -1,0 +1,133 @@
+"""serve-bench: replay an arch traffic mix through the plan-serving path.
+
+One run = sample ``n`` concurrent requests from a :class:`TrafficMix`,
+compile each through :class:`PlanService` (content-addressed plan cache),
+group the compiled decode steps with :class:`PhaseBatcher`, and execute
+every group as one mesh-sharded batched step.  The result dict -- p50/p99
+plan-compile and execute latencies, cache hit/miss/eviction counters,
+batching and simulated-cycle totals -- is committed to
+``bench-artifacts/serve.json`` under the versioned artifact envelope and
+gated in CI (p99 execute latency, >25% regression budget).
+
+``python -m repro serve-bench [--quick]`` is the CLI entry.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.params import SystemParams, PAPER_SYSTEM
+from repro.serve.batcher import PhaseBatcher
+from repro.serve.plan_cache import PlanCache
+from repro.serve.service import PlanService
+from repro.serve.traffic import TrafficMix
+
+
+def _percentiles(us: Sequence[float]) -> dict:
+    if not us:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0, "max": 0.0}
+    arr = np.asarray(us, np.float64)
+    return {"p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99)),
+            "mean": float(arr.mean()), "max": float(arr.max())}
+
+
+def default_mesh():
+    """A 1-D ``("data",)`` mesh over every local device, or None on a
+    single device (``shard`` degrades to a no-op either way)."""
+    import jax
+
+    devs = jax.devices()
+    if len(devs) < 2:
+        return None
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(devs), ("data",))
+
+
+def run_serve_bench(n_requests: int = 2048, *, seed: int = 0,
+                    mix: Optional[TrafficMix] = None,
+                    sys: SystemParams = PAPER_SYSTEM,
+                    cache: Optional[PlanCache] = None,
+                    cache_dir: Optional[str] = None, persist: bool = True,
+                    max_batch: int = 64, mesh=None,
+                    use_mesh_if_available: bool = True) -> dict:
+    """Replay the traffic mix; returns the serve.json payload dict."""
+    mix = mix or TrafficMix.default()
+    service = PlanService(sys, cache=cache, cache_dir=cache_dir,
+                          persist=persist)
+    if mesh is None and use_mesh_if_available:
+        mesh = default_mesh()
+    batcher = PhaseBatcher(max_batch=max_batch, mesh=mesh)
+
+    t0 = time.perf_counter()
+    requests = mix.sample(n_requests, seed=seed)
+    compiled = service.compile_many(requests)
+    compile_done = time.perf_counter()
+    groups, rows = batcher.run(compiled)
+    elapsed = time.perf_counter() - t0
+
+    # per-request execute latency = its group's batched-step wall-clock
+    execute_us = [g.execute_us for g in groups for _ in g.members]
+    compile_us = [c.compile_us for c in compiled]
+    sizes = [g.size for g in groups]
+    stats = service.cache.stats()
+
+    return {
+        "requests": n_requests,
+        "seed": seed,
+        "mix": mix.to_dict(),
+        "distinct_plans_bound": mix.distinct_plans,
+        "geometry": _geometry_dict(service.sys),
+        "mesh_devices": int(np.prod(mesh.devices.shape)) if mesh else 1,
+        "plan_compile_us": _percentiles(compile_us),
+        "execute_us": _percentiles(execute_us),
+        "compile_phase_s": compile_done - t0,
+        "elapsed_s": elapsed,
+        "throughput_rps": n_requests / elapsed if elapsed else 0.0,
+        "cache": stats,
+        "batches": {
+            "count": len(groups),
+            "signatures": len({g.signature for g in groups}),
+            "mean_size": float(np.mean(sizes)) if sizes else 0.0,
+            "max_size": max(sizes, default=0),
+        },
+        "simulated": {
+            "machine_cycles": sum(r["machine_cycles"] for r in rows),
+            "latency_cycles_max": max(
+                (r["latency_cycles"] for r in rows), default=0),
+            "transpose_cycles_saved": sum(
+                r["transpose_cycles_saved"] for r in rows),
+            "hybrid_plans": sum(1 for c in compiled if c.plan.is_hybrid),
+        },
+    }
+
+
+def _geometry_dict(sys: SystemParams) -> dict:
+    from repro.sweep.grid import Geometry
+
+    return Geometry.from_system(sys).to_dict()
+
+
+def check_regression(payload: dict, baseline_payload: dict,
+                     threshold: float = 0.25,
+                     metric: str = "execute_us", floor_us: float = 250.0
+                     ) -> tuple[bool, str]:
+    """CI gate: ``(ok, message)``; fails when the new p99 of ``metric``
+    exceeds the committed baseline by more than ``threshold``.
+
+    ``floor_us`` clamps the baseline: a committed p99 of ~70us doubling
+    under shared-runner jitter is noise, not a regression, so p99s under
+    ``floor_us * (1 + threshold)`` always pass and the gate targets
+    systematic multi-x regressions (per-request execution creeping back,
+    a plan blow-up in the batched step).
+    """
+    new = payload[metric]["p99"]
+    old = baseline_payload[metric]["p99"]
+    ref = max(old, floor_us)
+    ratio = new / ref if ref else 0.0
+    msg = (f"p99 {metric}: {new:.1f}us vs baseline {old:.1f}us "
+           f"(x{ratio:.2f}, budget x{1 + threshold:.2f})")
+    return ratio <= 1.0 + threshold, msg

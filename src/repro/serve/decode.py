@@ -55,9 +55,30 @@ class ServeSession:
             cur = jnp.argmax(logits[:, -1:, : self.cfg.vocab_size], axis=-1
                              ).astype(jnp.int32)
             for _ in range(max_new_tokens):
-                for i in range(B):
-                    out[i].append(int(cur[i, 0]))
+                # one device->host transfer for the whole batch per step
+                # (a per-request int(cur[i, 0]) would sync B times/step)
+                step_toks = np.asarray(cur)[:, 0]
+                for o, t in zip(out, step_toks.tolist()):
+                    o.append(t)
                 logits, cache = self._decode(self.params, cache, cur)
                 cur = jnp.argmax(logits[:, -1:, : self.cfg.vocab_size],
                                  axis=-1).astype(jnp.int32)
         return out
+
+    def layout_plan(self, *, tokens: Optional[int] = None,
+                    weight_bits: int = 4, service=None):
+        """The layout plan serving this session's architecture trace.
+
+        Compiles (or fetches from the content-addressed plan cache) the
+        ``arch/<id>`` workload at this session's context length via
+        ``repro.serve.PlanService`` -- the same plan the serve-bench
+        traffic path dispatches.
+        """
+        from repro.serve.service import PlanService, Request
+
+        if service is None:
+            service = PlanService()
+        req = Request(id=0, arch=self.cfg.name,
+                      tokens=tokens or self.max_len,
+                      weight_bits=weight_bits)
+        return service.compile(req).plan

@@ -1,0 +1,212 @@
+"""Content-addressed compiled-plan cache for the serving path.
+
+The sweep engine already caches whole design-space surfaces under
+``sha256(spec + model-source)`` (``repro.sweep.grid``); serving needs the
+same idea at per-request granularity: thousands of requests over the
+``arch/<id>`` traffic mix resolve to a few hundred distinct
+``(workload IR, geometry)`` points, so the plan compiler must run once per
+point, not once per request.
+
+Key contract (DESIGN.md Sec. 11)::
+
+    key = sha256( canonical-JSON(workload.to_dict())
+                + canonical-JSON(geometry.to_dict())
+                + scheduler-source fingerprint )[:24]
+
+The fingerprint hashes the *source* of ``repro.plan.scheduler`` and
+``repro.core.cost_model`` -- edit either and every cached plan misses
+(stale plans can never be served), exactly like the sweep cache's
+model fingerprint.
+
+Two tiers behind one `get`:
+
+* in-memory LRU (``capacity`` entries; eviction counter) -- the steady
+  state at serving rates;
+* content-addressed disk entries (``<dir>/<key>.json``) holding the full
+  ``LayoutPlan.to_dict()`` plus provenance (workload name, geometry label,
+  fingerprint, creation time) -- what makes a *second* ``serve-bench``
+  process start >=90% warm.
+
+Counters (``hits`` = ``mem_hits`` + ``disk_hits``, ``misses``,
+``evictions``, ``puts``) feed the ``serve.json`` artifact.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+import inspect
+import json
+import os
+import time
+from typing import Callable, Optional
+
+from repro.core.params import SystemParams
+from repro.plan.ir import LayoutPlan
+from repro.sweep.grid import Geometry
+from repro.workloads.ir import Workload
+
+
+def default_cache_dir() -> str:
+    return os.path.join(
+        os.environ.get("REPRO_BENCH_ARTIFACT_DIR", "bench-artifacts"),
+        "plan-cache")
+
+
+def scheduler_fingerprint() -> str:
+    """Source fingerprint of everything that determines a compiled plan:
+    the scheduler (solvers + assembly) and the cost model its node
+    weights come from.  Any edit invalidates every cached plan."""
+    from repro.core import cost_model
+    from repro.plan import scheduler
+
+    src = inspect.getsource(scheduler) + inspect.getsource(cost_model)
+    return hashlib.sha256(src.encode()).hexdigest()[:16]
+
+
+def plan_key(workload: Workload, sys: SystemParams,
+             fingerprint: Optional[str] = None,
+             initial_layout: Optional[str] = None) -> str:
+    """The content address of ``compile_plan(workload, sys,
+    initial_layout=...)``; ``initial_layout`` is the layout the operands
+    arrive in ("BP"/"BS"/None) and changes the compiled plan, so it is
+    part of the address."""
+    blob = json.dumps(
+        {"workload": workload.to_dict(),
+         "geometry": Geometry.from_system(sys).to_dict(),
+         "initial_layout": initial_layout},
+        sort_keys=True) + (fingerprint or scheduler_fingerprint())
+    return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+class PlanCache:
+    """Two-tier (memory LRU + content-addressed disk) compiled-plan store.
+
+    ``persist=False`` keeps the cache purely in-memory (unit tests /
+    throwaway sweeps); otherwise every compiled plan lands on disk with
+    its provenance and survives the process.
+    """
+
+    def __init__(self, capacity: int = 1024,
+                 cache_dir: Optional[str] = None, persist: bool = True,
+                 fingerprint: Optional[str] = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1 (got {capacity})")
+        self.capacity = capacity
+        self.cache_dir = default_cache_dir() if cache_dir is None \
+            else cache_dir
+        self.persist = persist
+        self.fingerprint = fingerprint or scheduler_fingerprint()
+        self._mem: collections.OrderedDict[str, LayoutPlan] = \
+            collections.OrderedDict()
+        self.mem_hits = 0
+        self.disk_hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.puts = 0
+
+    # ------------------------------------------------------------- keying
+    def key(self, workload: Workload, sys: SystemParams,
+            initial_layout: Optional[str] = None) -> str:
+        return plan_key(workload, sys, self.fingerprint, initial_layout)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.cache_dir, f"{key}.json")
+
+    # ------------------------------------------------------------- access
+    def get(self, key: str) -> Optional[LayoutPlan]:
+        """Memory first, then disk (which re-warms memory); None = miss."""
+        plan = self._mem.get(key)
+        if plan is not None:
+            self._mem.move_to_end(key)
+            self.mem_hits += 1
+            return plan
+        if self.persist:
+            path = self._path(key)
+            if os.path.exists(path):
+                with open(path) as f:
+                    entry = json.load(f)
+                plan = LayoutPlan.from_dict(entry["plan"])
+                self.disk_hits += 1
+                self._remember(key, plan)
+                return plan
+        self.misses += 1
+        return None
+
+    def put(self, key: str, plan: LayoutPlan,
+            provenance: Optional[dict] = None) -> None:
+        self.puts += 1
+        self._remember(key, plan)
+        if not self.persist:
+            return
+        os.makedirs(self.cache_dir, exist_ok=True)
+        entry = {
+            "key": key,
+            "plan": plan.to_dict(include_steps=True),
+            "provenance": {
+                "workload": plan.workload,
+                "geometry": plan.geometry.label(),
+                "scheduler_fingerprint": self.fingerprint,
+                "created_unix": time.time(),
+                **(provenance or {}),
+            },
+        }
+        tmp = self._path(key) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(entry, f, indent=1, sort_keys=True)
+        os.replace(tmp, self._path(key))  # atomic vs concurrent readers
+
+    def get_or_compile(self, workload: Workload, sys: SystemParams,
+                       compile_fn: Callable[[], LayoutPlan],
+                       provenance: Optional[dict] = None,
+                       initial_layout: Optional[str] = None
+                       ) -> tuple[LayoutPlan, str, bool]:
+        """``(plan, key, hit)`` -- the one call sites actually want."""
+        key = self.key(workload, sys, initial_layout)
+        plan = self.get(key)
+        if plan is not None:
+            return plan, key, True
+        plan = compile_fn()
+        self.put(key, plan, provenance)
+        return plan, key, False
+
+    # ----------------------------------------------------------- internal
+    def _remember(self, key: str, plan: LayoutPlan) -> None:
+        self._mem[key] = plan
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+            self.evictions += 1
+
+    # -------------------------------------------------------------- stats
+    @property
+    def hits(self) -> int:
+        return self.mem_hits + self.disk_hits
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def disk_entries(self) -> int:
+        if not (self.persist and os.path.isdir(self.cache_dir)):
+            return 0
+        return sum(1 for p in os.listdir(self.cache_dir)
+                   if p.endswith(".json"))
+
+    def stats(self) -> dict:
+        """Counter snapshot (recorded verbatim in serve.json)."""
+        return {
+            "lookups": self.hits + self.misses,
+            "hits": self.hits,
+            "mem_hits": self.mem_hits,
+            "disk_hits": self.disk_hits,
+            "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "evictions": self.evictions,
+            "puts": self.puts,
+            "capacity": self.capacity,
+            "mem_entries": len(self._mem),
+            "disk_entries": self.disk_entries(),
+            "dir": self.cache_dir if self.persist else None,
+            "fingerprint": self.fingerprint,
+        }

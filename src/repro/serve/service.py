@@ -1,0 +1,109 @@
+"""Per-request plan compilation: the serving-path plan compiler.
+
+``PlanService`` is the machine-level scheduling substrate of the serving
+path: every incoming request (architecture, context length, weight
+precision -- :class:`repro.serve.traffic.Request`) lowers to its
+``arch/<id>`` workload IR at the request's operating point and compiles to
+an executable :class:`~repro.plan.ir.LayoutPlan`, through the
+content-addressed :class:`~repro.serve.plan_cache.PlanCache` so identical
+operating points compile once per fingerprint, not once per request.
+
+The planner itself is resolved through the one backend factory
+(``repro.workloads.get_backend("planner")``) -- the serving path
+constructs no backend classes directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+from repro.core.cost_model import Layout
+from repro.core.params import SystemParams, PAPER_SYSTEM
+from repro.plan.ir import LayoutPlan
+from repro.serve.plan_cache import PlanCache
+from repro.serve.traffic import Request
+from repro.workloads.ir import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledRequest:
+    """A request with its compiled (or cache-served) layout plan."""
+
+    request: Request
+    workload: Workload
+    plan: LayoutPlan
+    key: str              #: content address (plan-cache key)
+    cache_hit: bool
+    compile_us: float     #: wall-clock of lower+hash+lookup(+compile)
+
+    @property
+    def signature(self) -> tuple[str, ...]:
+        """The plan's layout-phase sequence -- the batcher's grouping key
+        (requests sharing it execute as one batched decode step)."""
+        return tuple(lay.value for lay in self.plan.schedule)
+
+
+class PlanService:
+    """Compile a layout plan per request, content-addressed-cached.
+
+    ``backend`` is a registry name resolved via the
+    ``repro.workloads.get_backend`` factory; it must expose
+    ``compile(workload, sys) -> LayoutPlan`` (the planner backend does).
+
+    ``initial_layout`` is the layout request operands arrive in.  Serving
+    traffic lands bit-parallel (row-major DRAM order), so the default
+    "BP" charges the arrival transpose whenever the plan's first phase is
+    BS -- which is what the phase batcher amortizes across a group.  It
+    is part of the plan-cache key.
+    """
+
+    def __init__(self, sys: SystemParams = PAPER_SYSTEM, *,
+                 cache: Optional[PlanCache] = None,
+                 cache_dir: Optional[str] = None, persist: bool = True,
+                 backend: str = "planner",
+                 initial_layout: Optional[str] = "BP", **backend_opts):
+        from repro.workloads import get_backend
+
+        self.sys = sys
+        self.initial_layout = initial_layout
+        self.planner = get_backend(backend, **backend_opts)
+        if not hasattr(self.planner, "compile"):
+            raise TypeError(
+                f"backend {backend!r} cannot compile plans "
+                "(needs a .compile(workload, sys) -> LayoutPlan)")
+        self.cache = cache if cache is not None else PlanCache(
+            cache_dir=cache_dir, persist=persist)
+
+    # ------------------------------------------------------------ lowering
+    def workload_for(self, request: Request) -> Workload:
+        """Lower the request to its workload IR at the request's operating
+        point (context length + weight precision)."""
+        from repro.configs import get_config
+        from repro.workloads.registry import arch_workload
+
+        return arch_workload(get_config(request.arch),
+                             tokens=request.tokens,
+                             weight_bits=request.weight_bits)
+
+    # ------------------------------------------------------------- compile
+    def compile(self, request: Request) -> CompiledRequest:
+        """Lower + (cache-lookup or compile) one request; the measured
+        ``compile_us`` is the full per-request plan-service latency."""
+        t0 = time.perf_counter()
+        w = self.workload_for(request)
+        init = (Layout(self.initial_layout)
+                if self.initial_layout is not None else None)
+        plan, key, hit = self.cache.get_or_compile(
+            w, self.sys,
+            lambda: self.planner.compile(w, self.sys, initial_layout=init),
+            provenance={"arch": request.arch, "tokens": request.tokens,
+                        "weight_bits": request.weight_bits,
+                        "initial_layout": self.initial_layout},
+            initial_layout=self.initial_layout)
+        us = (time.perf_counter() - t0) * 1e6
+        return CompiledRequest(request=request, workload=w, plan=plan,
+                               key=key, cache_hit=hit, compile_us=us)
+
+    def compile_many(self, requests) -> list[CompiledRequest]:
+        return [self.compile(r) for r in requests]

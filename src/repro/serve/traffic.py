@@ -1,0 +1,105 @@
+"""Simulated serving traffic over the ``arch/<id>`` workload registry.
+
+A :class:`TrafficMix` is the configurable request-population description
+serve-bench replays: which architectures are hot (Zipf-weighted by
+default, the shape of real multi-tenant serving), which context lengths
+arrive, and which weight precisions the quantized deployments use.
+Sampling is seeded and deterministic, so a serve-bench run is exactly
+reproducible and its cache hit-rate is a function of the mix, not of RNG
+drift.
+
+The distinct-plan space of a mix is ``archs x token buckets x precisions``
+(each combination lowers to a different workload IR, hence a different
+plan-cache key); the request count over that space is what makes the
+content-addressed cache pay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One simulated serving request (a decode step to schedule).
+
+    ``slot`` is the continuous-batching slot the request occupies (the
+    cache row ``ServeSession`` would decode it in); it identifies the
+    request within a batch group and never enters the plan-cache key --
+    plans depend on (arch, tokens, weight_bits) only.
+    """
+
+    id: int
+    arch: str
+    tokens: int
+    weight_bits: int
+    slot: int = 0
+
+    @property
+    def workload_name(self) -> str:
+        return f"arch/{self.arch}"
+
+
+def arch_ids() -> list[str]:
+    """The ``arch/<id>`` registry ids (no jax import needed)."""
+    from repro.workloads.registry import workload_names
+
+    return [n.split("/", 1)[1] for n in workload_names("arch")]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMix:
+    """A request-population description: categorical distributions over
+    architecture, context length, and weight precision."""
+
+    archs: tuple[str, ...]
+    arch_weights: tuple[float, ...]
+    token_buckets: tuple[int, ...] = (256, 512, 1024, 2048, 4096)
+    token_weights: tuple[float, ...] = (0.35, 0.25, 0.20, 0.15, 0.05)
+    weight_bits: tuple[int, ...] = (2, 4, 8, 16)
+    bits_weights: tuple[float, ...] = (0.15, 0.55, 0.20, 0.10)
+    #: continuous-batching slots per scheduling round
+    max_slots: int = 64
+
+    def __post_init__(self):
+        for name, vals, w in (("arch", self.archs, self.arch_weights),
+                              ("token", self.token_buckets,
+                               self.token_weights),
+                              ("bits", self.weight_bits,
+                               self.bits_weights)):
+            if len(vals) != len(w):
+                raise ValueError(f"{name}: {len(vals)} values vs "
+                                 f"{len(w)} weights")
+
+    @classmethod
+    def default(cls, archs: Optional[Sequence[str]] = None) -> "TrafficMix":
+        """Zipf-weighted mix over the registered ``arch/<id>`` traces."""
+        archs = tuple(archs if archs is not None else arch_ids())
+        ranks = np.arange(1, len(archs) + 1, dtype=np.float64)
+        w = 1.0 / ranks
+        w /= w.sum()
+        return cls(archs=archs, arch_weights=tuple(float(x) for x in w))
+
+    @property
+    def distinct_plans(self) -> int:
+        """Upper bound on distinct plan-cache keys this mix can emit."""
+        return (len(self.archs) * len(self.token_buckets)
+                * len(self.weight_bits))
+
+    def sample(self, n: int, seed: int = 0) -> list[Request]:
+        """``n`` concurrent requests, deterministically from ``seed``."""
+        rng = np.random.default_rng(seed)
+        ai = rng.choice(len(self.archs), size=n, p=self.arch_weights)
+        ti = rng.choice(len(self.token_buckets), size=n,
+                        p=self.token_weights)
+        bi = rng.choice(len(self.weight_bits), size=n, p=self.bits_weights)
+        return [Request(id=i, arch=self.archs[ai[i]],
+                        tokens=self.token_buckets[ti[i]],
+                        weight_bits=self.weight_bits[bi[i]],
+                        slot=i % self.max_slots)
+                for i in range(n)]
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)

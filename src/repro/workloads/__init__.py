@@ -5,12 +5,18 @@ Public surface (see README.md in this directory and DESIGN.md Sec. 5):
     from repro.workloads import (
         Op, Workload,                 # the IR
         get_workload, list_workloads, workload_names,  # the registry
-        Backend, Report, OpReport,    # the protocol
-        BACKENDS, get_backend,        # backend registry
+        Backend, Report, OpReport,    # the protocol (versioned to_dict)
+        BACKENDS, get_backend,        # backend registry + THE factory
+        backend_names, register_backend,
         characterize,                 # the entry point
     )
 
     characterize("vgg", backends=("analytic", "planner", "executor"))
+    get_backend("planner", execute=True)   # the supported construction API
+
+Construct backends through ``get_backend(name, **opts)`` -- direct class
+imports (``PlannerBackend(...)``) still work but are a deprecated
+construction path kept for existing callers.
 
 CLI: ``python -m repro list | characterize | tables``.
 """
@@ -23,8 +29,11 @@ from repro.workloads.backends import (  # noqa: F401
     PallasBackend,
     PlannerBackend,
     Report,
+    REPORT_SCHEMA_VERSION,
+    backend_names,
     characterize,
     get_backend,
+    register_backend,
 )
 from repro.workloads.ir import (  # noqa: F401
     Op,

@@ -39,6 +39,12 @@ from repro.core.cost_model import Layout
 from repro.core.params import SystemParams, PAPER_SYSTEM
 from repro.workloads.ir import Op, Workload, op_cost
 
+#: version of the Report/OpReport dict schema (bump on breaking field
+#: changes; ``Report.from_dict`` refuses newer versions).  Every committed
+#: bench artifact (characterize.json, plans.json, serve.json) carries this
+#: same version inside the ``repro.artifacts`` envelope.
+REPORT_SCHEMA_VERSION = 1
+
 
 @dataclasses.dataclass(frozen=True)
 class OpReport:
@@ -58,6 +64,20 @@ class OpReport:
     energy_nj: Optional[float] = None
     note: str = ""
 
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if d["breakdown"] is not None:
+            d["breakdown"] = {k: list(v) for k, v in d["breakdown"].items()}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "OpReport":
+        d = dict(d)
+        if d.get("breakdown"):
+            d["breakdown"] = {k: tuple(v)
+                              for k, v in d["breakdown"].items()}
+        return cls(**d)
+
 
 @dataclasses.dataclass(frozen=True)
 class Report:
@@ -68,6 +88,30 @@ class Report:
     ops: tuple[OpReport, ...]
     summary: dict
     notes: tuple[str, ...] = ()
+
+    def to_dict(self) -> dict:
+        """Versioned dict form -- the one schema all bench-artifact
+        consumers parse (round-trip pinned in tests/test_serve.py)."""
+        return {
+            "schema_version": REPORT_SCHEMA_VERSION,
+            "workload": self.workload,
+            "backend": self.backend,
+            "ops": [op.to_dict() for op in self.ops],
+            "summary": dict(self.summary),
+            "notes": list(self.notes),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Report":
+        ver = d.get("schema_version", REPORT_SCHEMA_VERSION)
+        if ver > REPORT_SCHEMA_VERSION:
+            raise ValueError(
+                f"report schema v{ver} is newer than this reader "
+                f"(v{REPORT_SCHEMA_VERSION})")
+        return cls(workload=d["workload"], backend=d["backend"],
+                   ops=tuple(OpReport.from_dict(o) for o in d["ops"]),
+                   summary=dict(d["summary"]),
+                   notes=tuple(d.get("notes", ())))
 
 
 @runtime_checkable
@@ -207,11 +251,21 @@ class PlannerBackend(_SequentialEstimateMany):
     def supports(self, workload: Workload) -> bool:
         return True
 
+    def compile(self, workload: Workload,
+                sys: SystemParams = PAPER_SYSTEM, **kwargs):
+        """Compile the workload into its :class:`~repro.plan.ir.LayoutPlan`
+        (the artifact ``estimate`` summarizes).  The serving path
+        (``repro.serve.PlanService``) resolves this backend through
+        :func:`get_backend` and calls ``compile`` per request."""
+        from repro.plan import compile_plan
+
+        return compile_plan(workload, sys, **kwargs)
+
     def estimate(self, workload: Workload,
                  sys: SystemParams = PAPER_SYSTEM) -> Report:
-        from repro.plan import compile_plan, replay_plan
+        from repro.plan import replay_plan
 
-        p = compile_plan(workload, sys)
+        p = self.compile(workload, sys)
         rows, notes = [], []
         for oi, op in enumerate(workload.ops):
             steps = [s for s in p.steps if s.op_index == oi]
@@ -449,6 +503,11 @@ class PallasBackend(_SequentialEstimateMany):
 # Registry + the single entry point
 # ---------------------------------------------------------------------------
 
+#: the registered name -> class table every construction site resolves
+#: through (:func:`get_backend`); CLI ``--backends`` choices are generated
+#: from it.  Register new backends here (or via :func:`register_backend`)
+#: instead of importing classes directly -- direct backend imports are a
+#: deprecated construction path (DESIGN.md Sec. 5).
 BACKENDS: dict[str, type] = {
     "analytic": AnalyticBackend,
     "planner": PlannerBackend,
@@ -457,13 +516,36 @@ BACKENDS: dict[str, type] = {
 }
 
 
-def get_backend(spec: Union[str, Backend]) -> Backend:
+def register_backend(name: str, cls: type) -> None:
+    """Register a Backend class under ``name`` (overwrites allowed so
+    tests can shadow a backend with an instrumented double)."""
+    BACKENDS[name] = cls
+
+
+def backend_names() -> list[str]:
+    """Registered backend names, sorted (the CLI choice list)."""
+    return sorted(BACKENDS)
+
+
+def get_backend(spec: Union[str, Backend], **opts) -> Backend:
+    """THE backend factory: resolve a registry name (with constructor
+    options) or pass an already-built instance through.
+
+    ``get_backend("planner", execute=True)`` ==
+    ``PlannerBackend(execute=True)`` without importing the class --
+    `__main__`, ``characterize``, benchmarks, and the serving path all
+    construct backends this way.
+    """
     if isinstance(spec, str):
         try:
-            return BACKENDS[spec]()
+            cls = BACKENDS[spec]
         except KeyError:
             raise KeyError(f"unknown backend {spec!r} "
-                           f"(known: {', '.join(sorted(BACKENDS))})") from None
+                           f"(known: {', '.join(backend_names())})") from None
+        return cls(**opts)
+    if opts:
+        raise TypeError("constructor options only apply to registry names, "
+                        f"not already-built instances ({spec!r})")
     return spec
 
 

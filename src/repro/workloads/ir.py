@@ -118,6 +118,16 @@ class Op:
             return max(1, self.n)
         return 1
 
+    def to_dict(self) -> dict:
+        """Canonical field dump (every field, declaration order) -- the
+        serialization the serving plan cache content-addresses, so two
+        structurally identical ops always hash identically."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Op":
+        return cls(**d)
+
     def features(self) -> WorkloadFeatures:
         """Lower to the Table-8 feature vector (``taxonomy.classify``)."""
         blf = self.bit_level_fraction
@@ -276,6 +286,28 @@ class Workload:
             raise ValueError(
                 f"workload {self.name!r}: duplicate dep edge(s) {dupes} "
                 "would double-charge the boundary transpose")
+
+    def to_dict(self) -> dict:
+        """Canonical JSON-ready form (ops in DAG order, explicit deps).
+
+        This is the normative workload-IR serialization: the serving
+        layer's plan-cache key is ``sha256`` over this dict (plus geometry
+        and scheduler source), so field additions extend it automatically
+        and structurally identical workloads hash identically."""
+        return {
+            "name": self.name,
+            "source": self.source,
+            "description": self.description,
+            "ops": [op.to_dict() for op in self.ops],
+            "deps": [list(e) for e in self.deps],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Workload":
+        return cls(name=d["name"], source=d.get("source", "table6"),
+                   description=d.get("description", ""),
+                   ops=tuple(Op.from_dict(o) for o in d["ops"]),
+                   deps=tuple((a, b) for a, b in d.get("deps", ())))
 
     def edges(self) -> tuple[tuple[int, int], ...]:
         """Dependence edges: ``deps`` if given, else the linear chain."""

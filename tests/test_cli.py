@@ -40,7 +40,10 @@ def test_characterize_quick_writes_schema_valid_artifact(tmp_path):
     proc = run_cli("characterize", "--quick", "mk/vector_add", "aes",
                    artifact_dir=tmp_path)
     assert proc.returncode == 0, proc.stderr
-    art = json.loads((tmp_path / "characterize.json").read_text())
+    env = json.loads((tmp_path / "characterize.json").read_text())
+    assert env["artifact"] == "characterize"
+    assert env["schema_version"] == 1
+    art = env["payload"]
     assert set(art) == {"mk/vector_add", "aes"}
     for summaries in art.values():
         assert set(summaries) >= {"analytic", "planner", "executor"}

@@ -433,7 +433,9 @@ def test_cli_plan_quick_writes_artifact(tmp_path, monkeypatch, capsys):
 
     monkeypatch.setenv("REPRO_BENCH_ARTIFACT_DIR", str(tmp_path))
     assert main(["plan", "--quick"]) == 0
-    data = json.loads((tmp_path / "plans.json").read_text())
+    env = json.loads((tmp_path / "plans.json").read_text())
+    assert env["artifact"] == "plans" and env["schema_version"] == 1
+    data = env["payload"]
     assert set(data) == set(workload_names("table6"))
     assert data["aes"]["total_cycles"] == 6961
     capsys.readouterr()
@@ -459,7 +461,7 @@ def test_cli_plan_quick_json_keeps_full_steps(tmp_path, monkeypatch,
     monkeypatch.setenv("REPRO_BENCH_ARTIFACT_DIR", str(tmp_path))
     out_json = tmp_path / "full.json"
     assert main(["plan", "aes", "--quick", "--json", str(out_json)]) == 0
-    summary = json.loads((tmp_path / "plans.json").read_text())
+    summary = json.loads((tmp_path / "plans.json").read_text())["payload"]
     full = json.loads(out_json.read_text())
     assert "steps" not in summary["aes"]
     assert len(full["aes"]["steps"]) == 40

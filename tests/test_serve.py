@@ -1,0 +1,440 @@
+"""Layout-aware serving tests (ISSUE 6): the plan cache's key contract,
+counters and tiers; the plan service; phase-grouped batching invariants;
+the versioned Report/artifact schema; the `get_backend` factory; and the
+serve-bench CLI (including the >=90%-warm second run, via subprocess).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core.params import PAPER_SYSTEM
+from repro.plan.ir import LayoutPlan
+from repro.serve import (
+    PhaseBatcher,
+    PlanCache,
+    PlanService,
+    Request,
+    TrafficMix,
+    arch_ids,
+    check_regression,
+    plan_key,
+    run_serve_bench,
+)
+from repro.sweep import Geometry
+from repro.workloads import (
+    Report,
+    backend_names,
+    get_backend,
+    get_workload,
+    register_backend,
+)
+
+SMALL_GEO = Geometry(rows=128, cols=512, arrays=64)
+
+
+def _req(i=0, arch="tinyllama_1_1b", tokens=256, bits=4):
+    return Request(id=i, arch=arch, tokens=tokens, weight_bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# plan_key: the content-address contract
+# ---------------------------------------------------------------------------
+
+def test_plan_key_is_deterministic():
+    w = get_workload("aes")
+    assert plan_key(w, PAPER_SYSTEM) == plan_key(w, PAPER_SYSTEM)
+    assert len(plan_key(w, PAPER_SYSTEM)) == 24
+
+
+def test_plan_key_separates_workload_geometry_and_arrival_layout():
+    w1, w2 = get_workload("aes"), get_workload("vgg")
+    k = plan_key(w1, PAPER_SYSTEM)
+    assert plan_key(w2, PAPER_SYSTEM) != k
+    assert plan_key(w1, SMALL_GEO.system()) != k
+    assert plan_key(w1, PAPER_SYSTEM, initial_layout="BP") != k
+
+
+def test_plan_key_misses_on_scheduler_fingerprint_change():
+    """Editing the scheduler source must invalidate every cached plan."""
+    w = get_workload("aes")
+    real = plan_key(w, PAPER_SYSTEM)
+    stale = plan_key(w, PAPER_SYSTEM, fingerprint="deadbeef")
+    assert real != stale
+
+    cache = PlanCache(persist=False)
+    from repro.plan import compile_plan
+
+    cache.put(cache.key(w, PAPER_SYSTEM), compile_plan(w, PAPER_SYSTEM))
+    stale_cache = PlanCache(persist=False, fingerprint="deadbeef")
+    assert stale_cache.get(stale_cache.key(w, PAPER_SYSTEM)) is None
+
+
+# ---------------------------------------------------------------------------
+# PlanCache: counters, LRU, disk tier
+# ---------------------------------------------------------------------------
+
+def test_cache_counters_and_hit_rate():
+    service = PlanService(cache=PlanCache(persist=False))
+    reqs = [_req(0), _req(1), _req(2, tokens=512), _req(3), _req(4)]
+    compiled = service.compile_many(reqs)
+    stats = service.cache.stats()
+    # 2 distinct operating points -> 2 misses, 3 hits
+    assert stats["misses"] == 2
+    assert stats["hits"] == stats["mem_hits"] == 3
+    assert stats["lookups"] == 5
+    assert stats["hit_rate"] == pytest.approx(3 / 5)
+    assert [c.cache_hit for c in compiled] == [False, True, False, True,
+                                               True]
+    # a cache hit returns the identical compiled plan
+    assert compiled[1].plan is compiled[0].plan
+    assert compiled[1].key == compiled[0].key
+
+
+def test_cache_lru_eviction():
+    cache = PlanCache(capacity=2, persist=False)
+    service = PlanService(cache=cache)
+    service.compile(_req(0, tokens=256))
+    service.compile(_req(1, tokens=512))
+    service.compile(_req(2, tokens=1024))  # evicts the tokens=256 plan
+    assert cache.evictions == 1
+    c = service.compile(_req(3, tokens=256))  # must recompile
+    assert not c.cache_hit
+
+
+def test_cache_disk_tier_survives_the_process(tmp_path):
+    d = str(tmp_path / "plan-cache")
+    first = PlanService(cache_dir=d)
+    c0 = first.compile(_req(0))
+    assert not c0.cache_hit
+
+    second = PlanService(cache_dir=d)  # fresh memory, same disk
+    c1 = second.compile(_req(1))
+    assert c1.cache_hit
+    assert second.cache.disk_hits == 1 and second.cache.mem_hits == 0
+    assert c1.plan.total_cycles == c0.plan.total_cycles
+    assert c1.plan.schedule == c0.plan.schedule
+
+    entry = json.loads(
+        (tmp_path / "plan-cache" / f"{c0.key}.json").read_text())
+    prov = entry["provenance"]
+    assert prov["arch"] == "tinyllama_1_1b"
+    assert prov["scheduler_fingerprint"] == first.cache.fingerprint
+
+
+def test_cache_no_persist_writes_nothing(tmp_path):
+    d = str(tmp_path / "plan-cache")
+    PlanService(cache_dir=d, persist=False).compile(_req(0))
+    assert not os.path.exists(d)
+
+
+# ---------------------------------------------------------------------------
+# LayoutPlan serialization (the disk-cache format)
+# ---------------------------------------------------------------------------
+
+def test_layout_plan_round_trip():
+    from repro.plan import compile_plan
+
+    p = compile_plan(get_workload("aes"), PAPER_SYSTEM)
+    q = LayoutPlan.from_dict(p.to_dict(include_steps=True))
+    assert q.total_cycles == p.total_cycles
+    assert q.schedule == p.schedule
+    assert q.workload == p.workload
+    assert q.geometry == p.geometry
+    assert len(q.steps) == len(p.steps)
+    assert [t.cycles for t in q.transposes] == \
+        [t.cycles for t in p.transposes]
+    assert q.feasible == p.feasible
+
+
+def test_layout_plan_summary_dump_cannot_round_trip():
+    from repro.plan import compile_plan
+
+    p = compile_plan(get_workload("aes"), PAPER_SYSTEM)
+    with pytest.raises(ValueError, match="steps"):
+        LayoutPlan.from_dict(p.to_dict(include_steps=False))
+
+
+# ---------------------------------------------------------------------------
+# Versioned Report schema + artifact envelope (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_report_schema_round_trip():
+    rep = get_backend("analytic").estimate(get_workload("aes"))
+    d = rep.to_dict()
+    assert d["schema_version"] == 1
+    back = Report.from_dict(d)
+    assert back == rep
+    # through JSON too (the committed-artifact path)
+    assert Report.from_dict(json.loads(json.dumps(d))) == rep
+
+
+def test_report_refuses_newer_schema():
+    rep = get_backend("analytic").estimate(get_workload("mk/multu"))
+    d = rep.to_dict()
+    d["schema_version"] = 999
+    with pytest.raises(ValueError, match="newer"):
+        Report.from_dict(d)
+
+
+def test_artifact_envelope_round_trip(tmp_path):
+    from repro.artifacts import (
+        ArtifactError, read_artifact, read_envelope, write_artifact,
+    )
+
+    path = str(tmp_path / "x.json")
+    write_artifact(path, "serve", {"a": 1}, generated_by="test")
+    assert read_artifact(path, "serve") == {"a": 1}
+    assert read_envelope(path)["generated_by"] == "test"
+    with pytest.raises(ArtifactError, match="kind"):
+        read_artifact(path, "plans")
+
+    env = json.loads(Path(path).read_text())
+    env["schema_version"] = 999
+    Path(path).write_text(json.dumps(env))
+    with pytest.raises(ArtifactError, match="newer"):
+        read_artifact(path, "serve")
+
+
+# ---------------------------------------------------------------------------
+# get_backend factory (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_get_backend_resolves_every_registered_name():
+    for name in backend_names():
+        b = get_backend(name)
+        assert b.name == name
+
+
+def test_get_backend_unknown_name_lists_registry():
+    with pytest.raises(KeyError, match="analytic"):
+        get_backend("no_such_backend")
+
+
+def test_get_backend_passes_constructor_options():
+    assert get_backend("planner", execute=True).execute is True
+
+
+def test_get_backend_accepts_instances_but_not_with_options():
+    inst = get_backend("analytic")
+    assert get_backend(inst) is inst
+    with pytest.raises(TypeError):
+        get_backend(inst, execute=True)
+
+
+def test_register_backend_extends_the_registry():
+    class FakeBackend:
+        name = "fake_for_test"
+
+        def supports(self, w):
+            return False
+
+        def estimate(self, w, sys=PAPER_SYSTEM):
+            raise NotImplementedError
+
+    register_backend("fake_for_test", FakeBackend)
+    try:
+        assert "fake_for_test" in backend_names()
+        assert isinstance(get_backend("fake_for_test"), FakeBackend)
+    finally:
+        from repro.workloads.backends import BACKENDS
+
+        del BACKENDS["fake_for_test"]
+
+
+def test_plan_service_rejects_backends_without_compile():
+    with pytest.raises(TypeError, match="compile"):
+        PlanService(backend="analytic")
+
+
+# ---------------------------------------------------------------------------
+# PhaseBatcher: grouping + amortization invariants
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def compiled_sample():
+    service = PlanService(cache=PlanCache(persist=False))
+    return service.compile_many(TrafficMix.default().sample(96, seed=3))
+
+
+def test_batcher_groups_share_one_signature(compiled_sample):
+    groups = PhaseBatcher(max_batch=16).group(compiled_sample)
+    assert sum(g.size for g in groups) == len(compiled_sample)
+    for g in groups:
+        assert 1 <= g.size <= 16
+        assert all(m.signature == g.signature for m in g.members)
+
+
+def test_batcher_grouping_is_stable(compiled_sample):
+    groups = PhaseBatcher(max_batch=1024).group(compiled_sample)
+    for g in groups:
+        ids = [m.request.id for m in g.members]
+        assert ids == sorted(ids)  # arrival order preserved
+
+
+def test_batcher_amortization_accounting(compiled_sample):
+    for g in PhaseBatcher(max_batch=32).group(compiled_sample):
+        tr = g.member_transpose_cycles()
+        comp = g.member_compute_cycles()
+        assert g.amortized_transpose_cycles == max(tr, default=0)
+        assert g.transpose_cycles_saved == sum(tr) - max(tr, default=0)
+        assert g.transpose_cycles_saved >= 0
+        assert g.latency_cycles == max(comp, default=0) \
+            + g.amortized_transpose_cycles
+        assert g.machine_cycles == sum(comp) \
+            + g.amortized_transpose_cycles
+        # grouping never charges more than running members alone
+        alone = sum(c + t for c, t in zip(comp, tr))
+        assert g.machine_cycles <= alone
+
+
+def test_batcher_execute_records_wall_clock(compiled_sample):
+    batcher = PhaseBatcher(max_batch=8)
+    g = batcher.group(compiled_sample)[0]
+    row = batcher.execute(g)
+    assert g.execute_us is not None and g.execute_us > 0
+    # float32 device reduction agrees with the exact host integers
+    assert row["device_latency_cycles"] == \
+        pytest.approx(g.latency_cycles, rel=1e-5)
+    assert row["device_machine_cycles"] == \
+        pytest.approx(g.machine_cycles, rel=1e-5)
+
+
+def test_arrival_layout_charges_the_bp2bs_transpose():
+    """Serving operands arrive bit-parallel; an all-BS plan must carry
+    the arrival transpose (what the batcher amortizes)."""
+    service = PlanService(cache=PlanCache(persist=False))
+    c = service.compile(_req(0))
+    assert c.plan.n_transposes >= 1
+    none_service = PlanService(cache=PlanCache(persist=False),
+                               initial_layout=None)
+    c_none = none_service.compile(_req(0))
+    assert c_none.plan.n_transposes == 0
+    assert c_none.key != c.key  # arrival layout is part of the address
+
+
+# ---------------------------------------------------------------------------
+# Traffic mix
+# ---------------------------------------------------------------------------
+
+def test_traffic_mix_sampling_is_deterministic():
+    mix = TrafficMix.default()
+    a = mix.sample(64, seed=7)
+    b = mix.sample(64, seed=7)
+    assert a == b
+    assert mix.sample(64, seed=8) != a
+    assert {r.arch for r in a} <= set(mix.archs)
+    assert mix.distinct_plans == len(mix.archs) * 5 * 4
+    assert set(arch_ids()) >= {"tinyllama_1_1b"}
+
+
+def test_traffic_mix_validates_weight_lengths():
+    with pytest.raises(ValueError, match="arch"):
+        TrafficMix(archs=("a", "b"), arch_weights=(1.0,))
+
+
+# ---------------------------------------------------------------------------
+# serve-bench scenario + regression gate
+# ---------------------------------------------------------------------------
+
+def test_run_serve_bench_payload_shape(tmp_path):
+    p = run_serve_bench(64, seed=0, cache_dir=str(tmp_path))
+    assert p["requests"] == 64
+    assert set(p) >= {"plan_compile_us", "execute_us", "cache", "batches",
+                      "simulated", "mix", "throughput_rps"}
+    for pct in (p["plan_compile_us"], p["execute_us"]):
+        assert pct["p50"] <= pct["p99"] <= pct["max"]
+    assert p["cache"]["lookups"] == 64
+    assert p["batches"]["count"] >= p["batches"]["signatures"] >= 1
+    assert p["simulated"]["transpose_cycles_saved"] >= 0
+
+
+def test_check_regression_thresholds():
+    base = {"execute_us": {"p99": 100.0}}
+    ok, _ = check_regression({"execute_us": {"p99": 120.0}}, base,
+                             floor_us=5.0)
+    assert ok
+    bad, msg = check_regression({"execute_us": {"p99": 130.0}}, base,
+                                floor_us=5.0)
+    assert not bad and "p99" in msg
+    # sub-noise baselines are floored, not divided by: a p99 under
+    # floor_us * (1 + threshold) always passes
+    ok, _ = check_regression({"execute_us": {"p99": 310.0}},
+                             {"execute_us": {"p99": 70.0}})
+    assert ok
+    bad, _ = check_regression({"execute_us": {"p99": 320.0}},
+                              {"execute_us": {"p99": 70.0}})
+    assert not bad
+
+
+def test_cli_serve_bench_gate_fails_on_regression(tmp_path, monkeypatch,
+                                                  capsys):
+    from repro.__main__ import main
+    from repro.artifacts import write_artifact
+
+    monkeypatch.setenv("REPRO_BENCH_ARTIFACT_DIR", str(tmp_path))
+    baseline = tmp_path / "baseline.json"
+    write_artifact(str(baseline), "serve",
+                   {"execute_us": {"p99": 0.001}}, generated_by="test")
+    rc = main(["serve-bench", "--requests", "32",
+               "--baseline", str(baseline),
+               "--regress-floor-us", "0.0001"])
+    out = capsys.readouterr().out
+    assert rc == 3
+    assert "FAIL" in out
+
+
+def test_cli_serve_bench_missing_baseline_skips_gate(tmp_path, monkeypatch,
+                                                     capsys):
+    from repro.__main__ import main
+
+    monkeypatch.setenv("REPRO_BENCH_ARTIFACT_DIR", str(tmp_path))
+    rc = main(["serve-bench", "--requests", "32",
+               "--baseline", str(tmp_path / "missing.json")])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "gate skipped" in out
+
+
+# ---------------------------------------------------------------------------
+# serve-bench CLI, the way CI runs it (subprocess)
+# ---------------------------------------------------------------------------
+
+SRC = str(Path(__file__).parent.parent / "src")
+
+
+def _run_serve_cli(artifact_dir, *extra):
+    env = {"PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu",
+           "PATH": os.environ.get("PATH", "/usr/bin"),
+           "REPRO_BENCH_ARTIFACT_DIR": str(artifact_dir)}
+    return subprocess.run(
+        [sys.executable, "-m", "repro", "serve-bench", "--quick",
+         "--requests", "256", *extra],
+        capture_output=True, text=True, env=env)
+
+
+def test_cli_serve_bench_second_run_is_cache_served(tmp_path):
+    """The acceptance criterion: a repeat --quick run against the same
+    artifact dir is >=90% plan-cache served (disk tier, new process)."""
+    first = _run_serve_cli(tmp_path)
+    assert first.returncode == 0, first.stderr
+    env1 = json.loads((tmp_path / "serve.json").read_text())
+    assert env1["artifact"] == "serve" and env1["schema_version"] == 1
+    p1 = env1["payload"]
+    assert p1["requests"] == 256
+
+    # huge threshold: this asserts the gate plumbing runs, not timing
+    second = _run_serve_cli(tmp_path, "--baseline",
+                            str(tmp_path / "serve.json"),
+                            "--regress-threshold", "50")
+    assert second.returncode == 0, \
+        second.stdout + second.stderr
+    p2 = json.loads((tmp_path / "serve.json").read_text())["payload"]
+    assert p2["cache"]["hit_rate"] >= 0.90
+    assert p2["cache"]["disk_hits"] > 0
+    assert "# regression gate" in second.stdout

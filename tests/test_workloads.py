@@ -292,7 +292,10 @@ def test_cli_characterize_quick_writes_artifact(tmp_path, monkeypatch,
 
     monkeypatch.setenv("REPRO_BENCH_ARTIFACT_DIR", str(tmp_path))
     assert main(["characterize", "--quick", "--backends", "analytic"]) == 0
-    data = json.loads((tmp_path / "characterize.json").read_text())
+    env = json.loads((tmp_path / "characterize.json").read_text())
+    assert env["artifact"] == "characterize"
+    assert env["schema_version"] == 1
+    data = env["payload"]
     assert len(data) == len(workload_names("table5")) \
         + len(workload_names("table6"))
     assert data["aes"]["analytic"]["bp_cycles"] == 18624
