@@ -35,6 +35,14 @@ Subcommands:
                        ``bench-artifacts/serve.json``.  ``--baseline``
                        gates p99 execute latency against a committed
                        artifact (the CI bench-smoke regression check).
+* ``trace-diff``    -- the differential harness: reconcile the
+                       jaxpr-traced ``traced/<id>`` workloads against the
+                       hand-written ``arch/<id>`` formulas op by op
+                       (repro.workloads.trace_diff).  Writes
+                       ``bench-artifacts/traced_vs_formula.csv`` and
+                       exits non-zero on any unexplained per-op delta.
+                       ``--quick`` is the CI smoke: the smallest arch
+                       plus VGG.
 * ``tables``        -- the model-reproduced paper tables (the golden
                        snapshot text; see tests/golden/paper_tables.txt).
 
@@ -56,6 +64,10 @@ Examples::
     python -m repro guidelines
     python -m repro serve-bench --requests 4096
     python -m repro serve-bench --quick --baseline bench-artifacts/serve.json
+    python -m repro list --source traced
+    python -m repro characterize traced/tinyllama_1_1b --ops
+    python -m repro trace-diff --quick
+    python -m repro trace-diff --pallas-archs tinyllama_1_1b
 """
 from __future__ import annotations
 
@@ -381,6 +393,45 @@ def cmd_serve_bench(args) -> int:
     return 0
 
 
+def cmd_trace_diff(args) -> int:
+    from repro.workloads.trace_diff import run_diff, write_csv
+
+    archs = list(args.archs)
+    if args.quick and not archs:
+        archs = ["tinyllama_1_1b"]
+    backends = [b.strip() for b in args.backends.split(",") if b.strip()]
+    pallas_archs = [a.strip() for a in (args.pallas_archs or "").split(",")
+                    if a.strip()]
+    rows, fails = run_diff(
+        archs or None, tokens=args.tokens, weight_bits=args.weight_bits,
+        backends=backends, pallas_archs=pallas_archs,
+        include_vgg=not args.no_vgg)
+    for r in rows:
+        if r.status == "total":
+            print(f"{r.arch:28s} [{r.backend:8s}] "
+                  f"formula bp={r.bp_formula:.0f} bs={r.bs_formula:.0f}  "
+                  f"traced bp={r.bp_traced:.0f} bs={r.bs_traced:.0f} "
+                  f"{r.unit} ({r.note})")
+    n_exact = sum(1 for r in rows if r.status == "exact")
+    n_div = sum(1 for r in rows if r.status == "divergent")
+    n_extra = sum(1 for r in rows if r.status == "traced-only")
+    print(f"# {n_exact} exact pairs, {n_div} documented-divergent pairs, "
+          f"{n_extra} traced-only rows (x backends)")
+    out = args.out or os.path.join(_artifact_dir(),
+                                   "traced_vs_formula.csv")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    write_csv(rows, out)
+    print(f"# wrote {len(rows)} rows to {out}")
+    if fails:
+        for f in fails:
+            print(f"FAIL: {f}", file=sys.stderr)
+        print(f"# gate: {len(fails)} unexplained delta(s)", file=sys.stderr)
+        return 3
+    print("# gate: every formula op matched, every traced op explained, "
+          "exact pairs agree to the cycle")
+    return 0
+
+
 def cmd_tables(args) -> int:
     del args
     from repro.core.paper_tables import golden_snapshot
@@ -395,7 +446,8 @@ def main(argv=None) -> int:
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     p_list = sub.add_parser("list", help="registered workloads and backends")
-    p_list.add_argument("--source", choices=("table5", "table6", "arch"),
+    p_list.add_argument("--source",
+                        choices=("table5", "table6", "arch", "traced"),
                         default=None)
     p_list.set_defaults(fn=cmd_list)
 
@@ -507,6 +559,35 @@ def main(argv=None) -> int:
     p_serve.add_argument("--json", default=None, metavar="PATH",
                          help="dump the full payload (pre-envelope) as JSON")
     p_serve.set_defaults(fn=cmd_serve_bench)
+
+    p_diff = sub.add_parser(
+        "trace-diff",
+        help="reconcile traced/<id> workloads against the arch/<id> "
+             "formulas (differential gate + CSV artifact)")
+    p_diff.add_argument("archs", nargs="*",
+                        help="arch ids (e.g. tinyllama_1_1b; default: "
+                             "all 10)")
+    p_diff.add_argument("--tokens", type=int, default=4096,
+                        help="decode batch / KV length (default 4096, the "
+                             "arch/<id> operating point)")
+    p_diff.add_argument("--weight-bits", type=int, default=4,
+                        help="weight precision (default 4)")
+    p_diff.add_argument("--backends", default="analytic,planner,executor",
+                        help="comma list of static backends (default "
+                             "analytic,planner,executor)")
+    p_diff.add_argument("--pallas-archs", default=None, metavar="IDS",
+                        help="comma list of archs to additionally time "
+                             "on the Pallas tile backend (us, recorded "
+                             "but never gated)")
+    p_diff.add_argument("--no-vgg", action="store_true",
+                        help="skip the traced-VGG-vs-vgg16 cross-check")
+    p_diff.add_argument("--quick", action="store_true",
+                        help="CI smoke: smallest arch (tinyllama_1_1b) "
+                             "+ VGG")
+    p_diff.add_argument("--out", default=None, metavar="PATH",
+                        help="CSV path (default "
+                             "<artifact-dir>/traced_vs_formula.csv)")
+    p_diff.set_defaults(fn=cmd_trace_diff)
 
     p_tab = sub.add_parser("tables", help="model-reproduced paper tables")
     p_tab.set_defaults(fn=cmd_tables)

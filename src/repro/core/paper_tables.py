@@ -290,6 +290,24 @@ def golden_snapshot() -> str:
                   "(mk/* sweep @ paper geometry, widths 4/8/16/32; "
                   "crossover = max width with BS total < BP total)"]
     lines += guidelines_lines(guidelines(use_cache=False))
+
+    # jaxpr-traced decode op tables (repro.workloads.trace): the traced
+    # matmul inventory of one dense, one SSM, and one MoE arch at the
+    # arch/<id> operating point -- pinned so tracer lowering drift
+    # (dims, widths, op inventory) fails tier-1 (DESIGN.md Sec. 12).
+    from repro.configs import get_config
+    from repro.models.registry import traced_workload
+    lines += ["", "[traced] arch op m k n width "
+                  "(trace_workload decode @ tokens=4096, int4 weights; "
+                  "matmul ops + per-arch totals)"]
+    for arch in ("tinyllama_1_1b", "mamba2_780m", "dbrx_132b"):
+        w = traced_workload(get_config(arch))
+        mms = [op for op in w.ops if op.kind == "matmul"]
+        for op in mms:
+            lines.append(f"{arch} {op.name} {op.m} {op.k} {op.n} "
+                         f"{op.width}")
+        lines.append(f"{arch} total ops={len(w.ops)} matmuls={len(mms)} "
+                     f"deps={len(w.deps)}")
     return "\n".join(lines) + "\n"
 
 

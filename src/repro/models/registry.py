@@ -26,6 +26,62 @@ def model_fns(cfg: ArchConfig) -> SimpleNamespace:
     )
 
 
+def traced_workload(cfg: ArchConfig, *, tokens: int = 4096,
+                    phase: str = "decode", weight_bits: int = 4,
+                    scan_mode: str = "once"):
+    """Trace the family's real forward pass into a Workload DAG.
+
+    ``phase="decode"``: one decode step over ``tokens`` concurrent
+    sequences with a ``tokens``-long KV cache -- the operating point of
+    the hand-written ``arch/<id>`` serving formulas, so the two are
+    directly comparable (``repro.workloads.trace_diff``).
+    ``phase="prefill"``: ``forward_hidden`` over one ``tokens``-long
+    sequence.
+
+    Tracing is abstract (``jax.ShapeDtypeStruct`` pytrees): full-size
+    models trace without allocating a single parameter.  Weight matrices
+    (>=2-D leaves at the model dtype) resolve to ``weight_bits``; the
+    RG-LRU gate matrices stay at model precision, matching the 16-bit
+    ``rg_lru_gates`` formula op.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.base import abstract_params
+    from repro.workloads.trace import param_path_widths, trace_workload
+
+    if phase not in ("decode", "prefill"):
+        raise ValueError(f"phase must be 'decode' or 'prefill', "
+                         f"got {phase!r}")
+    fns = model_fns(cfg)
+    params = abstract_params(fns.param_structure(cfg))
+    pmap = param_path_widths(params, weight_bits=weight_bits,
+                             dtype=cfg.dtype,
+                             exclude=("a_gate", "input_gate"))
+    if phase == "decode":
+        cache = abstract_params(
+            fns.cache_structure(cfg, batch=tokens, max_len=tokens))
+        tok = jax.ShapeDtypeStruct((tokens, 1), jnp.int32)
+
+        def fn(p, c, t):
+            return fns.decode_step(cfg, p, c, t)
+        args = (params, cache, tok)
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((1, tokens), jnp.int32)}
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (1, cfg.enc_seq, cfg.d_model), cfg.dtype)
+
+        def fn(p, b):
+            return fns.forward_hidden(cfg, p, b)
+        args = (params, batch)
+    return trace_workload(
+        fn, *args, precision_map=pmap, name=f"traced/{cfg.name}",
+        source="traced", scan_mode=scan_mode,
+        description=(f"{cfg.name} jaxpr-traced {phase} step "
+                     f"({tokens} tokens, int{weight_bits} weights)"))
+
+
 def param_count(cfg: ArchConfig) -> int:
     """Exact parameter count from the parameter structure."""
     return param_count_of(model_fns(cfg).param_structure(cfg))

@@ -56,17 +56,27 @@ class PlanService:
     "BP" charges the arrival transpose whenever the plan's first phase is
     BS -- which is what the phase batcher amortizes across a group.  It
     is part of the plan-cache key.
+
+    ``trace=True`` lowers requests through the jaxpr tracer
+    (``models.registry.traced_workload`` -- the real forward pass as a
+    DAG) instead of the hand-written ``arch_workload`` formulas.  Traced
+    workloads are memoized per operating point: tracing costs ~100ms
+    while the formula build is microseconds, and the content-addressed
+    plan cache keys on the workload either way.
     """
 
     def __init__(self, sys: SystemParams = PAPER_SYSTEM, *,
                  cache: Optional[PlanCache] = None,
                  cache_dir: Optional[str] = None, persist: bool = True,
                  backend: str = "planner",
-                 initial_layout: Optional[str] = "BP", **backend_opts):
+                 initial_layout: Optional[str] = "BP",
+                 trace: bool = False, **backend_opts):
         from repro.workloads import get_backend
 
         self.sys = sys
         self.initial_layout = initial_layout
+        self.trace = trace
+        self._traced: dict[tuple, Workload] = {}
         self.planner = get_backend(backend, **backend_opts)
         if not hasattr(self.planner, "compile"):
             raise TypeError(
@@ -80,6 +90,16 @@ class PlanService:
         """Lower the request to its workload IR at the request's operating
         point (context length + weight precision)."""
         from repro.configs import get_config
+
+        if self.trace:
+            from repro.models.registry import traced_workload
+
+            key = (request.arch, request.tokens, request.weight_bits)
+            if key not in self._traced:
+                self._traced[key] = traced_workload(
+                    get_config(request.arch), tokens=request.tokens,
+                    weight_bits=request.weight_bits)
+            return self._traced[key]
         from repro.workloads.registry import arch_workload
 
         return arch_workload(get_config(request.arch),

@@ -44,9 +44,14 @@ from repro.workloads.ir import (  # noqa: F401
 )
 from repro.workloads.registry import (  # noqa: F401
     AES_STAGE,
+    ARCH_IDS,
     arch_workload,
     get_workload,
     list_workloads,
     microkernel_workload,
     workload_names,
+)
+from repro.workloads.trace import (  # noqa: F401
+    param_path_widths,
+    trace_workload,
 )

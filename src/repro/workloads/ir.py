@@ -267,7 +267,7 @@ class Workload:
 
     name: str
     ops: tuple[Op, ...]
-    source: str = "table6"  # "table5" | "table6" | "arch"
+    source: str = "table6"  # "table5" | "table6" | "arch" | "traced"
     description: str = ""
     #: explicit DAG edges over op indices; () = linear chain
     deps: tuple[tuple[int, int], ...] = ()
@@ -286,6 +286,13 @@ class Workload:
             raise ValueError(
                 f"workload {self.name!r}: duplicate dep edge(s) {dupes} "
                 "would double-charge the boundary transpose")
+        # canonicalize: deps in sorted order, as plain int tuples --
+        # `to_dict()` feeds the serving plan-cache hash, which must not
+        # depend on trace iteration order (the jaxpr def-use walk emits
+        # edges in discovery order)
+        object.__setattr__(
+            self, "deps",
+            tuple(sorted((int(a), int(b)) for a, b in self.deps)))
 
     def to_dict(self) -> dict:
         """Canonical JSON-ready form (ops in DAG order, explicit deps).

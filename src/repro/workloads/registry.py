@@ -557,26 +557,61 @@ def arch_workload(cfg, *, tokens: int = 4096,
                     description=f"{cfg.name} int{weight_bits} serving")
 
 
+#: the 10 serving architectures (each registered as arch/<id> and
+#: traced/<id>)
+ARCH_IDS = [
+    "mamba2_780m", "dbrx_132b", "llama4_maverick_400b_a17b", "yi_6b",
+    "tinyllama_1_1b", "mistral_nemo_12b", "stablelm_1_6b",
+    "internvl2_2b", "recurrentgemma_2b", "whisper_small",
+]
+
+
 def _register_archs():
     # configs import jax transitively (models.base); resolve lazily so the
     # pure-analytic registry stays importable without the jax stack.
-    _ARCH_IDS = [
-        "mamba2_780m", "dbrx_132b", "llama4_maverick_400b_a17b", "yi_6b",
-        "tinyllama_1_1b", "mistral_nemo_12b", "stablelm_1_6b",
-        "internvl2_2b", "recurrentgemma_2b", "whisper_small",
-    ]
-
     def builder(arch_id):
         def build() -> Workload:
             from repro.configs import get_config
             return arch_workload(get_config(arch_id))
         return build
 
-    for arch_id in _ARCH_IDS:
+    for arch_id in ARCH_IDS:
         _REGISTRY[f"arch/{arch_id}"] = (
             "arch", f"{arch_id} per-layer int4 serving trace",
             builder(arch_id))
 
 
+# ---------------------------------------------------------------------------
+# jaxpr-traced workloads (source="traced")
+# ---------------------------------------------------------------------------
+
+def _register_traced():
+    """``traced/<id>``: the real forward pass of each arch, traced from
+    its jaxpr at the same operating point as ``arch/<id>`` (one decode
+    step, 4096 concurrent sequences, int4 weights), plus ``traced/vgg16``
+    for the Table-6 cross-check.  Builders import the jax model stack
+    lazily, like the ``arch/`` entries."""
+    def builder(arch_id):
+        def build() -> Workload:
+            from repro.configs import get_config
+            from repro.models.registry import traced_workload
+            return traced_workload(get_config(arch_id))
+        return build
+
+    for arch_id in ARCH_IDS:
+        _REGISTRY[f"traced/{arch_id}"] = (
+            "traced", f"{arch_id} jaxpr-traced int4 decode step",
+            builder(arch_id))
+
+    def build_vgg() -> Workload:
+        from repro.models.vgg import traced_vgg
+        return traced_vgg("vgg16")
+
+    _REGISTRY["traced/vgg16"] = (
+        "traced", "VGG-16 batch-128 CIFAR-10 inference, jaxpr-traced",
+        build_vgg)
+
+
 _register_microkernels()
 _register_archs()
+_register_traced()

@@ -190,7 +190,13 @@ def default_guidelines():
 def _golden_guidelines_lines() -> list[str]:
     text = GOLDEN.read_text()
     body = text.split("[guidelines]")[1].splitlines()[1:]
-    return [ln for ln in body if ln.strip()]
+    lines = []
+    for ln in body:
+        if ln.startswith("["):  # next golden section (e.g. [traced])
+            break
+        if ln.strip():
+            lines.append(ln)
+    return lines
 
 
 def test_guidelines_match_golden_snapshot(default_guidelines):
