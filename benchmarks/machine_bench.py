@@ -1,0 +1,82 @@
+"""Machine-level scheduling benchmarks + oracle rows.
+
+Rows:
+
+* ``machine.plan``       -- `plan_machine` of formula VGG16 at the paper
+  geometry, one partition per array; oracle: the delta catalogue
+  explains every machine-vs-planner cycle and N=1 reduces bit-for-bit.
+* ``machine.execute``    -- the critical partition class of traced VGG16
+  executed across all simulated arrays through `run_batched`
+  (quick: 64 arrays, full: 1024); oracle: zero unexplained
+  executed-vs-analytic rows and the batched-runner LRU stays bounded.
+* ``machine.scaling``    -- the iso-area scaling curve (quick: 2 points);
+  oracle: every feasible point's schedule is explained.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, quick, time_us
+
+
+def bench_machine_plan():
+    from repro.machine import plan_machine
+    from repro.workloads import get_workload
+
+    w = get_workload("vgg16")
+    us = time_us(lambda: plan_machine(w))
+    s = plan_machine(w)
+    s1 = plan_machine(w, n_parts=1)
+    ok = (s.explained and s1.total_cycles == s1.planner_total
+          and not s1.deltas)
+    return [emit("machine.plan", us,
+                 f"N={s.n_partitions};classes={len(s.classes)};"
+                 f"total={s.total_cycles};planner={s.planner_total};"
+                 f"delta={s.delta_total};match={ok}")]
+
+
+def bench_machine_execute():
+    from repro.machine import execute_schedule, plan_machine
+    from repro.pim.executor import batched_cache_stats
+    from repro.sweep import Geometry
+    from repro.workloads import get_workload
+
+    arrays = 64 if quick() else 1024
+    rows = 128 if quick() else 64
+    w = get_workload("traced/vgg16")
+    sched = plan_machine(w, Geometry(rows=rows, cols=512, arrays=arrays))
+
+    def run():
+        return execute_schedule(sched, w, functional=True,
+                                collect_hlo=False)
+
+    us = time_us(run)
+    res = run()
+    stats = batched_cache_stats()
+    ok = (not res["unexplained"]
+          and all(r["explained"] for r in res["rows"])
+          and res["arrays_simulated"] >= arrays
+          and stats["size"] <= stats["limit"])
+    return [emit("machine.execute", us,
+                 f"arrays={res['arrays_simulated']};"
+                 f"programs={len(res['programs'])};"
+                 f"cache_size={stats['size']};match={ok}")]
+
+
+def bench_machine_scaling():
+    from repro.machine import run_machine_bench
+    from repro.sweep import iso_area_family
+
+    fam = iso_area_family()
+    geos = tuple(g for g in fam if g.rows in ((128, 512) if quick()
+                                              else (64, 128, 512)))
+    us = time_us(lambda: run_machine_bench(
+        "vgg16", geometries=geos, execute=False, run_diff=False))
+    payload = run_machine_bench("vgg16", geometries=geos, execute=False,
+                                run_diff=False)
+    pts = [p for p in payload["curve"] if "error" not in p]
+    ok = bool(pts) and all(p["explained"] for p in pts) \
+        and not payload["gate_failures"]
+    return [emit("machine.scaling", us,
+                 f"points={len(pts)}/{len(payload['curve'])};match={ok}")]
+
+
+ALL = (bench_machine_plan, bench_machine_execute, bench_machine_scaling)

@@ -147,8 +147,25 @@ def _parse_geometry(text):
                     row_bandwidth_bits=bw_bits).system()
 
 
-def cmd_characterize(args) -> int:
+def _resolve_system(geometry_text, arrays):
+    """--geometry / --arrays -> SystemParams (arrays overrides the count
+    so single-array and machine-level numbers share one CLI surface)."""
+    import dataclasses
+
     from repro.core.params import PAPER_SYSTEM
+    from repro.sweep import Geometry
+
+    system = _parse_geometry(geometry_text) if geometry_text \
+        else PAPER_SYSTEM
+    if arrays:
+        if arrays < 1:
+            raise SystemExit(f"error: --arrays must be >= 1, got {arrays}")
+        system = dataclasses.replace(
+            Geometry.from_system(system), arrays=arrays).system()
+    return system
+
+
+def cmd_characterize(args) -> int:
     from repro.workloads import backend_names, characterize, workload_names
 
     spec = args.backends or ("analytic,planner,executor" if args.quick
@@ -167,8 +184,7 @@ def cmd_characterize(args) -> int:
     if not names:
         print("error: no workloads given (or use --quick)", file=sys.stderr)
         return 2
-    system = (_parse_geometry(args.geometry) if args.geometry
-              else PAPER_SYSTEM)
+    system = _resolve_system(args.geometry, args.arrays)
     artifact: dict[str, dict] = {}
     full: dict[str, dict] = {}
     for name in names:
@@ -195,7 +211,6 @@ def cmd_characterize(args) -> int:
 
 def cmd_plan(args) -> int:
     from repro.core.cost_model import Layout
-    from repro.core.params import PAPER_SYSTEM
     from repro.plan import compile_plan, replay_plan
     from repro.workloads import get_workload, workload_names
 
@@ -205,8 +220,7 @@ def cmd_plan(args) -> int:
     if not names:
         print("error: no workloads given (or use --quick)", file=sys.stderr)
         return 2
-    system = (_parse_geometry(args.geometry) if args.geometry
-              else PAPER_SYSTEM)
+    system = _resolve_system(args.geometry, args.arrays)
     init = Layout(args.initial_layout) if args.initial_layout else None
     artifact: dict[str, dict] = {}
     full: dict[str, dict] = {}
@@ -432,6 +446,66 @@ def cmd_trace_diff(args) -> int:
     return 0
 
 
+def cmd_machine_bench(args) -> int:
+    from repro.artifacts import write_artifact
+    from repro.machine.bench import run_machine_bench
+    from repro.sweep import iso_area_family
+
+    geometries = None
+    if args.geometries:
+        geometries = iso_area_family()[:args.geometries]
+    mesh = None
+    if not args.no_execute:
+        from repro.machine.engine import default_mesh
+
+        mesh = default_mesh()
+    payload = run_machine_bench(
+        args.workload, quick=args.quick, geometries=geometries,
+        execute=not args.no_execute, mesh=mesh,
+        run_diff=not args.no_diff)
+    for pt in payload["curve"]:
+        if "error" in pt:
+            print(f"{pt['geometry']:>16s} arrays={pt['arrays']:<5d} "
+                  f"infeasible: {pt['error']}")
+            continue
+        tag = "  [executed]" if pt["executed"] else ""
+        print(f"{pt['geometry']:>16s} arrays={pt['arrays']:<5d} "
+              f"classes={pt['classes']} total={pt['total_cycles']:>10d} "
+              f"(compute={pt['compute_cycles']} "
+              f"movement={pt['movement_cycles']} "
+              f"transpose={pt['transpose_cycles']}) "
+              f"planner={pt['planner_total']} "
+              f"delta={pt['delta_total']:+d}{tag}")
+    ex = payload["executed"]
+    if ex:
+        print(f"# executed {ex['arrays_simulated']} simulated arrays "
+              f"across {ex['mesh_devices']} device(s) @ {ex['geometry']}; "
+              f"{len(ex['programs'])} distinct micro-op programs")
+        if ex["io"]:
+            io = ex["io"]
+            print(f"# io reconciliation ({io['program']}): model "
+                  f"{io['model_io_bytes']} B vs HLO boundary "
+                  f"{io['hlo_boundary_bytes']} B "
+                  f"(x{io['ratio']:.1f} host-side)")
+    path = os.path.join(_artifact_dir(), "machine.json")
+    write_artifact(path, "machine", payload,
+                   generated_by="python -m repro machine-bench")
+    print(f"# wrote machine scaling curve to {path}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote full payload to {args.json}")
+    if payload["gate_failures"]:
+        for msg in payload["gate_failures"]:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        print(f"# gate: {len(payload['gate_failures'])} unexplained "
+              "divergence(s)", file=sys.stderr)
+        return 3
+    print("# gate: analytic, planner, machine, and executed totals "
+          "reconcile; every delta itemized")
+    return 0
+
+
 def cmd_tables(args) -> int:
     del args
     from repro.core.paper_tables import golden_snapshot
@@ -470,6 +544,9 @@ def main(argv=None) -> int:
     p_char.add_argument("--geometry", default=None, metavar="RxCxA[@BW]",
                         help="system geometry rows x cols x arrays "
                              "(optional @row-bus-bits), e.g. 128x512x64")
+    p_char.add_argument("--arrays", type=int, default=0, metavar="N",
+                        help="override the geometry's array count (machine "
+                             "scale from the single-array CLI surface)")
     p_char.set_defaults(fn=cmd_characterize)
 
     p_plan = sub.add_parser(
@@ -479,6 +556,9 @@ def main(argv=None) -> int:
     p_plan.add_argument("--geometry", default=None, metavar="RxCxA[@BW]",
                         help="system geometry rows x cols x arrays "
                              "(optional @row-bus-bits), e.g. 128x512x64")
+    p_plan.add_argument("--arrays", type=int, default=0, metavar="N",
+                        help="override the geometry's array count (machine "
+                             "scale from the single-array CLI surface)")
     p_plan.add_argument("--initial-layout", default=None,
                         choices=("BP", "BS"),
                         help="layout the data arrives in (charges the "
@@ -588,6 +668,28 @@ def main(argv=None) -> int:
                         help="CSV path (default "
                              "<artifact-dir>/traced_vs_formula.csv)")
     p_diff.set_defaults(fn=cmd_trace_diff)
+
+    p_mach = sub.add_parser(
+        "machine-bench",
+        help="compile + execute a Table-6 app across the iso-area machine "
+             "axis (MachineSchedule IR; three-way differential gate)")
+    p_mach.add_argument("--workload", default="traced/vgg16",
+                        help="registry name to scale (default traced/vgg16)")
+    p_mach.add_argument("--quick", action="store_true",
+                        help="CI smoke: 3 geometries (1024/512/128 arrays) "
+                             "and a reduced differential scope")
+    p_mach.add_argument("--geometries", type=int, default=0, metavar="N",
+                        help="use only the first N iso-area geometries "
+                             "(widest machines first)")
+    p_mach.add_argument("--no-execute", action="store_true",
+                        help="skip the functional batched simulation "
+                             "(static accounting only)")
+    p_mach.add_argument("--no-diff", action="store_true",
+                        help="skip the analytic/planner/executed "
+                             "differential harness")
+    p_mach.add_argument("--json", default=None, metavar="PATH",
+                        help="dump the full payload (pre-envelope) as JSON")
+    p_mach.set_defaults(fn=cmd_machine_bench)
 
     p_tab = sub.add_parser("tables", help="model-reproduced paper tables")
     p_tab.set_defaults(fn=cmd_tables)

@@ -308,6 +308,22 @@ def golden_snapshot() -> str:
                          f"{op.width}")
         lines.append(f"{arch} total ops={len(w.ops)} matmuls={len(mms)} "
                      f"deps={len(w.deps)}")
+
+    # Machine-level schedules (repro.machine): the VGG16 partition /
+    # movement summary across array counts at the paper-point geometry --
+    # pinned so partitioner, movement-pricing, or delta-catalogue drift
+    # fails tier-1 (DESIGN.md Sec. 13).
+    from repro.machine import plan_machine
+    lines += ["", "[machine] app N classes compute movement transpose "
+                  "total planner delta explained "
+                  "(plan_machine(vgg16) @ paper geometry)"]
+    for n_parts in (1, 8, 512):
+        s = plan_machine(get_workload("vgg16"), n_parts=n_parts)
+        lines.append(f"vgg16 {n_parts} {len(s.classes)} "
+                     f"{s.compute_cycles} {s.movement_cycles} "
+                     f"{s.transpose_cycles} {s.total_cycles} "
+                     f"{s.planner_total} {s.delta_total:+d} "
+                     f"{int(s.explained)}")
     return "\n".join(lines) + "\n"
 
 

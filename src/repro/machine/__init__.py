@@ -1,0 +1,46 @@
+"""Machine-level scheduling: Table-6 apps across thousands of arrays.
+
+The subsystem above `repro.plan`: partition a Workload across N
+simulated CSA array groups (:func:`plan_machine`), price machine-level
+movement/transpose traffic through the same Table-2 charge tables, run
+the critical partition class on the batched micro-op simulator
+(:func:`execute_schedule`), and gate the three-way analytic / planner /
+executed accounting (`repro.machine.diff`).  See README.md and
+DESIGN.md Sec. 13.
+"""
+from repro.machine.ir import (
+    DeltaRow,
+    MachineError,
+    MachineSchedule,
+    MovementStep,
+    PartitionClass,
+    PlacedOp,
+    TransposeTrafficStep,
+)
+from repro.machine.partition import (
+    class_boundaries,
+    plan_machine,
+    shard_sizes_for,
+    shard_workload,
+)
+from repro.machine.engine import execute_schedule
+from repro.machine.diff import DiffRow, run_diff
+from repro.machine.bench import run_machine_bench
+
+__all__ = [
+    "DeltaRow",
+    "DiffRow",
+    "MachineError",
+    "MachineSchedule",
+    "MovementStep",
+    "PartitionClass",
+    "PlacedOp",
+    "TransposeTrafficStep",
+    "class_boundaries",
+    "execute_schedule",
+    "plan_machine",
+    "run_diff",
+    "run_machine_bench",
+    "shard_sizes_for",
+    "shard_workload",
+]

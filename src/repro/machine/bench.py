@@ -1,0 +1,122 @@
+"""Machine-scale bench: a Table-6 app across the iso-area array axis.
+
+``run_machine_bench`` compiles one workload into a
+:class:`MachineSchedule` at every iso-area geometry (rows traded for
+arrays, capacity constant), executes the critical class functionally on
+the batched micro-op simulator at the widest machine point
+(>= 1024 simulated arrays, mesh-sharded), and runs the three-way
+differential harness.  The payload behind
+``bench-artifacts/machine.json``::
+
+    {"workload": ..., "quick": ...,
+     "curve": [{geometry, arrays, classes, compute/movement/transpose/
+                redistribute breakdown, planner_total, delta_total,
+                explained, executed: {...}|null}, ...],
+     "executed": {"arrays_simulated", "mesh_devices", "programs", "io"},
+     "diff": {"rows": [...], "fails": [...]},
+     "gate_failures": [...]}
+
+``gate_failures`` non-empty => the CLI exits 3 (the trace-diff pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.machine import diff as machine_diff
+from repro.machine.engine import execute_schedule
+from repro.machine.partition import plan_machine
+from repro.sweep.grid import Geometry, iso_area_family
+
+DEFAULT_WORKLOAD = "traced/vgg16"
+#: quick-mode rows axis: the acceptance point (rows=64 -> 1024 arrays),
+#: the paper point (128 -> 512), and one deep point (512 -> 128)
+QUICK_ROWS = (64, 128, 512)
+
+
+def _curve_geometries(quick: bool,
+                      geometries: Optional[Sequence[Geometry]]):
+    if geometries:
+        return tuple(geometries)
+    fam = iso_area_family()
+    if quick:
+        fam = tuple(g for g in fam if g.rows in QUICK_ROWS)
+    return fam
+
+
+def run_machine_bench(workload: str = DEFAULT_WORKLOAD, *,
+                      quick: bool = False,
+                      geometries: Optional[Sequence[Geometry]] = None,
+                      execute: bool = True, mesh=None,
+                      run_diff: bool = True) -> dict:
+    """Build the machine.json payload (see module docstring)."""
+    from repro.workloads import get_workload
+
+    w = get_workload(workload)
+    fam = _curve_geometries(quick, geometries)
+    gate_failures: list[str] = []
+    curve = []
+    executed_summary = None
+    # functional execution at the widest machine on the curve -- the
+    # acceptance point (>= 1024 simulated arrays when the family allows)
+    exec_geo = max(fam, key=lambda g: g.arrays) if execute else None
+
+    for geo in fam:
+        try:
+            sched = plan_machine(w, geo)
+        except Exception as exc:  # infeasible point: report, don't gate
+            curve.append({"geometry": geo.label(), "arrays": geo.arrays,
+                          "error": str(exc)})
+            continue
+        if not sched.explained:
+            gate_failures.append(
+                f"{workload} @ {geo.label()}: unexplained machine-vs-"
+                f"planner divergence ({sched.total_cycles} - "
+                f"{sched.planner_total} != {sched.delta_total})")
+        point = sched.summary()
+        point["executed"] = None
+        if execute and geo == exec_geo:
+            res = execute_schedule(sched, w, functional=True, mesh=mesh)
+            for msg in res["unexplained"]:
+                gate_failures.append(f"{workload} @ {geo.label()}: {msg}")
+            point["executed"] = {
+                "scheduled_compute": res["scheduled_compute"],
+                "executed_compute": res["executed_compute"],
+                "rows": res["rows"],
+            }
+            executed_summary = {
+                "geometry": geo.label(),
+                "arrays_simulated": res["arrays_simulated"],
+                "mesh_devices": res["mesh_devices"],
+                "programs": res["programs"],
+                "io": res["io"],
+            }
+        curve.append(point)
+
+    diff_payload = None
+    if run_diff:
+        if quick:
+            d_workloads: Sequence[str] = (workload, "mk/multu",
+                                          "mk/vector_add")
+            d_parts: Sequence[int] = (1, 4, 512)
+        else:
+            d_workloads = tuple(dict.fromkeys(
+                (workload,) + machine_diff.DEFAULT_WORKLOADS))
+            d_parts = machine_diff.DEFAULT_PARTS
+        rows, fails = machine_diff.run_diff(
+            d_workloads, parts=d_parts, execute=True, functional=False)
+        gate_failures.extend(fails)
+        diff_payload = {
+            "rows": [dataclasses.asdict(r) for r in rows],
+            "fails": fails,
+        }
+
+    return {
+        "workload": workload,
+        "quick": quick,
+        "geometries": [g.label() for g in fam],
+        "curve": curve,
+        "executed": executed_summary,
+        "diff": diff_payload,
+        "gate_failures": gate_failures,
+    }

@@ -1,0 +1,148 @@
+"""End-to-end differential harness: analytic vs planner vs machine.
+
+``run_diff`` closes the three-way loop the per-kernel replay gates
+cannot see (DESIGN.md Sec. 13):
+
+1. **analytic <-> planner** -- the whole-machine plan's static BP/BS
+   totals must equal the summed analytic ``op_cost`` totals to the
+   cycle (the plan IR and the analytic route price the same machine).
+2. **planner <-> machine** -- every cycle of
+   ``MachineSchedule.total_cycles - planner_total`` must be itemized in
+   the schedule's :class:`~repro.machine.ir.DeltaRow` catalogue
+   (``schedule.explained``); N=1 must reduce to the LayoutPlan path
+   exactly (zero deltas, equal totals).
+3. **machine <-> executed** -- the critical class's micro-op-executed
+   compute must match the scheduled compute up to the documented
+   Sec.-8 calibration deltas (kernels) and the itemized MAC
+   decomposition rows (matmul/conv); any other divergence is
+   unexplained.
+
+Any unexplained divergence lands in ``fails`` and the CLI
+(``python -m repro machine-bench``) exits 3 -- mirroring the
+``trace-diff`` gate.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.cost_model import Layout
+from repro.machine.engine import execute_schedule
+from repro.machine.partition import plan_machine
+from repro.sweep.grid import Geometry, PAPER_GEOMETRY
+
+#: default differential scope: the Table-6 VGG16 app (conv/matmul route)
+#: plus kernel-op workloads that exercise the Sec.-8 calibration gate
+DEFAULT_WORKLOADS = ("vgg16", "aes", "mk/multu", "mk/vector_add",
+                     "mk/reduction")
+DEFAULT_PARTS = (1, 4, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffRow:
+    """One (workload, partition count) machine-vs-planner record."""
+
+    workload: str
+    n_parts: int
+    classes: int
+    machine_total: int
+    planner_total: int
+    delta_total: int
+    explained: bool
+    executed_compute: Optional[int]
+    scheduled_compute: Optional[int]
+    status: str          #: ``ok`` | ``unexplained``
+    note: str = ""
+
+
+def _check_analytic(workload, sys, fails: list) -> None:
+    """Gate 1: planner statics == summed analytic op costs, exactly."""
+    from repro.plan import compile_plan
+
+    plan = compile_plan(workload, sys)
+    for lay, static in ((Layout.BP, plan.static_bp),
+                        (Layout.BS, plan.static_bs)):
+        analytic = workload.cost(lay, sys).total
+        if int(analytic) != static:
+            fails.append(
+                f"{workload.name}: planner static_{lay.value.lower()} "
+                f"{static} != analytic total {int(analytic)}")
+
+
+def run_diff(workloads: Optional[Sequence[str]] = None, *,
+             geometry: Geometry = PAPER_GEOMETRY,
+             parts: Sequence[int] = DEFAULT_PARTS,
+             execute: bool = True, functional: bool = False,
+             mesh=None) -> tuple[list[DiffRow], list[str]]:
+    """Run the three-way differential over ``workloads`` x ``parts``.
+
+    ``execute`` runs the static micro-op accounting (gate 3);
+    ``functional`` additionally replays the batched jax simulation
+    (identical cycle numbers -- the arrays are simulated for real, which
+    is what the bench does at the acceptance point).
+    """
+    from repro.workloads import get_workload
+
+    rows: list[DiffRow] = []
+    fails: list[str] = []
+    names = list(workloads) if workloads else list(DEFAULT_WORKLOADS)
+    sys_g = geometry.system()
+    for name in names:
+        w = get_workload(name)
+        _check_analytic(w, sys_g, fails)
+        for n_parts in parts:
+            if geometry.arrays % n_parts:
+                continue
+            sched = plan_machine(w, geometry, n_parts)
+            note = ""
+            ok = sched.explained
+            if not ok:
+                fails.append(
+                    f"{name} N={n_parts}: machine total "
+                    f"{sched.total_cycles} - planner "
+                    f"{sched.planner_total} != itemized delta "
+                    f"{sched.delta_total}")
+            if n_parts == 1:
+                if sched.total_cycles != sched.planner_total:
+                    ok = False
+                    fails.append(
+                        f"{name} N=1: machine total {sched.total_cycles} "
+                        f"!= planner total {sched.planner_total} "
+                        "(must reduce bit-for-bit)")
+                if sched.deltas:
+                    ok = False
+                    fails.append(
+                        f"{name} N=1: {len(sched.deltas)} delta rows "
+                        "(must be empty)")
+            executed = scheduled = None
+            if execute:
+                res = execute_schedule(sched, w, functional=functional,
+                                       mesh=mesh, collect_hlo=False)
+                executed = res["executed_compute"]
+                scheduled = res["scheduled_compute"]
+                if res["unexplained"]:
+                    ok = False
+                    for msg in res["unexplained"]:
+                        fails.append(f"{name} N={n_parts}: {msg}")
+                bad = [r for r in res["rows"] if not r["explained"]]
+                if bad:
+                    ok = False
+                note = f"{len(res['rows'])} executed rows"
+            rows.append(DiffRow(
+                workload=name, n_parts=n_parts, classes=len(sched.classes),
+                machine_total=sched.total_cycles,
+                planner_total=sched.planner_total,
+                delta_total=sched.delta_total, explained=sched.explained,
+                executed_compute=executed, scheduled_compute=scheduled,
+                status="ok" if ok else "unexplained", note=note))
+    return rows, fails
+
+
+def write_csv(rows: Sequence[DiffRow], path: str) -> None:
+    fields = [f.name for f in dataclasses.fields(DiffRow)]
+    with open(path, "w", newline="") as fh:
+        out = csv.writer(fh)
+        out.writerow(fields)
+        for r in rows:
+            out.writerow([getattr(r, f) for f in fields])

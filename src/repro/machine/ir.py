@@ -1,0 +1,238 @@
+"""The machine-level schedule IR: placement above :class:`LayoutPlan`.
+
+A :class:`MachineSchedule` describes how one `repro.workloads` Workload
+runs across a *whole machine* of N simulated CSA array groups (the
+per-array view the rest of the repo prices is one group of it), under an
+iso-area `sweep.Geometry` budget:
+
+* :class:`PartitionClass` -- a set of array groups that received the same
+  shard shapes.  Balanced ragged splits produce few distinct shapes
+  (one per distinct remainder boundary), so a 4096-way partition compiles
+  a handful of `LayoutPlan`s, not 4096.  Each class's plan is a genuine
+  `plan.compile_plan` product at the class's *per-group* geometry, so
+  every shard still gets its optimal BP/BS/hybrid phase assignment.
+* :class:`PlacedOp` -- one op's placement in one class: its shard of the
+  parallel axis, the per-step layouts its class plan assigned, and the
+  class-local compute/movement split.
+* :class:`MovementStep` -- machine-level bus traffic, priced once on the
+  shared row bus through the same Table-2 charge tables
+  (``SystemParams.xfer_cycles``): operand loads, result readouts, and
+  explicit inter-array ``redistribute`` halo traffic for convolutions.
+* :class:`TransposeTrafficStep` -- the executed class's boundary
+  transposes with their per-group replication count (groups transpose in
+  parallel; the machine charges the per-group cycles once).
+* :class:`DeltaRow` -- the end-to-end delta catalogue: every cycle of
+  ``total_cycles - planner_total`` (machine vs the whole-machine
+  `LayoutPlan`) must be itemized here, or ``explained`` is False and the
+  differential harness (`repro.machine.diff`) exits non-zero.
+
+Accounting contract (DESIGN.md Sec. 13, normative):
+
+    total_cycles = movement_cycles            (serial on the shared bus)
+                 + compute_cycles             (parallel across groups: the
+                                               slowest class's per-group
+                                               compute)
+                 + transpose_cycles           (the same class's per-group
+                                               boundary transposes)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.plan.ir import LayoutPlan
+from repro.sweep.grid import Geometry
+
+
+class MachineError(ValueError):
+    """Invalid machine-schedule construction (bad partition count,
+    inconsistent decomposition, or an unsatisfiable geometry)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacedOp:
+    """One workload op's placement in one partition class."""
+
+    op: str              #: op name in the machine workload
+    op_index: int        #: index in the machine workload's op tuple
+    kind: str
+    cls: int             #: owning partition-class index
+    shard_n: int         #: this class's share of the op's parallel axis
+    groups: int          #: array groups carrying this shard
+    layouts: tuple       #: per-step layout values the class plan assigned
+    compute_cycles: int  #: per-group compute at the class geometry
+    movement_cycles: int  #: class-local shard load/readout (informational)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class MovementStep:
+    """Machine-level bus traffic, bandwidth-serial on the shared row bus."""
+
+    op: str
+    phase: str           #: ``load`` | ``readout`` | ``bus`` | ``redistribute``
+    bits: float          #: modeled bus occupancy (cycles x bus width)
+    cycles: int
+    layout: str = ""     #: layout the traffic was priced in ("" = neutral)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransposeTrafficStep:
+    """A boundary transpose of the executed class, replicated per group."""
+
+    cls: int             #: partition class performing it
+    before_step: int     #: class-plan step index whose input is transposed
+    direction: str       #: ``bp2bs`` | ``bs2bp``
+    cycles: int          #: per-group cycles (charged once; groups run in
+                         #: parallel)
+    groups: int          #: concurrent per-group replicas
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaRow:
+    """One itemized component of ``total_cycles - planner_total``."""
+
+    source: str          #: ``compute`` | ``movement`` | ``transpose`` |
+                         #: ``redistribute``
+    op: str              #: op name ("" for workload-level rows)
+    cycles: int          #: signed machine-minus-planner contribution
+    reason: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionClass:
+    """Array groups sharing one shard shape (and thus one LayoutPlan)."""
+
+    index: int
+    groups: int               #: number of array groups in this class
+    arrays_per_group: int
+    geometry: Geometry        #: per-group geometry the plan compiled at
+    #: per machine-op shard of the parallel axis (0 = idle for that op;
+    #: unshardable kinds carry their full extent)
+    shard_sizes: tuple
+    plan: Optional[LayoutPlan]   #: None when every op sharded to zero
+    compute_cycles: int       #: per-group compute (sum over placed ops)
+    movement_cycles: int      #: per-group shard load/readout
+    transpose_cycles: int     #: per-group boundary transposes
+
+    @property
+    def total_cycles(self) -> int:
+        """Per-group plan total; equals ``plan.total_cycles`` (asserted
+        at construction by the partitioner)."""
+        return (self.compute_cycles + self.movement_cycles
+                + self.transpose_cycles)
+
+    def to_dict(self) -> dict:
+        return {
+            "index": self.index, "groups": self.groups,
+            "arrays_per_group": self.arrays_per_group,
+            "geometry": self.geometry.to_dict(),
+            "shard_sizes": list(self.shard_sizes),
+            "compute_cycles": self.compute_cycles,
+            "movement_cycles": self.movement_cycles,
+            "transpose_cycles": self.transpose_cycles,
+            "total_cycles": self.total_cycles,
+            "plan": (self.plan.to_dict(include_steps=False)
+                     if self.plan is not None else None),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSchedule:
+    """A compiled machine-level schedule for one workload."""
+
+    workload: str
+    geometry: Geometry            #: whole-machine geometry
+    n_partitions: int
+    exec_class: int               #: index of the slowest (critical) class
+    classes: tuple                #: tuple[PartitionClass, ...]
+    placed: tuple                 #: tuple[PlacedOp, ...] (all classes)
+    movement: tuple               #: tuple[MovementStep, ...] (machine bus)
+    transposes: tuple             #: tuple[TransposeTrafficStep, ...]
+    compute_cycles: int           #: executed class per-group compute
+    movement_cycles: int          #: sum of machine-level movement steps
+    transpose_cycles: int         #: executed class per-group transposes
+    planner_total: int            #: whole-machine LayoutPlan total
+    planner_static_bp: int
+    planner_static_bs: int
+    deltas: tuple                 #: tuple[DeltaRow, ...]
+    initial_layout: Optional[str] = None
+
+    # ------------------------------------------------------------- totals
+    @property
+    def total_cycles(self) -> int:
+        return (self.movement_cycles + self.compute_cycles
+                + self.transpose_cycles)
+
+    @property
+    def redistribute_cycles(self) -> int:
+        return sum(m.cycles for m in self.movement
+                   if m.phase == "redistribute")
+
+    @property
+    def delta_total(self) -> int:
+        return sum(d.cycles for d in self.deltas)
+
+    @property
+    def explained(self) -> bool:
+        """Does the itemized delta catalogue account for every cycle of
+        machine-vs-planner divergence?  The differential gate."""
+        return self.total_cycles - self.planner_total == self.delta_total
+
+    @property
+    def arrays_total(self) -> int:
+        return sum(c.groups * c.arrays_per_group for c in self.classes)
+
+    # ---------------------------------------------------------- accessors
+    def classes_for(self, op: str):
+        """PlacedOps of one op across every class (class order)."""
+        return tuple(p for p in self.placed if p.op == op)
+
+    def exec_placed(self):
+        """PlacedOps of the executed (critical) class, op order."""
+        return tuple(p for p in self.placed if p.cls == self.exec_class)
+
+    def summary(self) -> dict:
+        return {
+            "workload": self.workload,
+            "geometry": self.geometry.label(),
+            "arrays": self.geometry.arrays,
+            "n_partitions": self.n_partitions,
+            "classes": len(self.classes),
+            "compute_cycles": self.compute_cycles,
+            "movement_cycles": self.movement_cycles,
+            "redistribute_cycles": self.redistribute_cycles,
+            "transpose_cycles": self.transpose_cycles,
+            "total_cycles": self.total_cycles,
+            "planner_total": self.planner_total,
+            "planner_static_bp": self.planner_static_bp,
+            "planner_static_bs": self.planner_static_bs,
+            "delta_total": self.delta_total,
+            "explained": self.explained,
+        }
+
+    # ------------------------------------------------------ serialization
+    def to_dict(self) -> dict:
+        d = self.summary()
+        d.update({
+            "geometry": self.geometry.to_dict(),
+            "exec_class": self.exec_class,
+            "initial_layout": self.initial_layout,
+            "classes": [c.to_dict() for c in self.classes],
+            "placed": [p.to_dict() for p in self.placed],
+            "movement": [m.to_dict() for m in self.movement],
+            "transposes": [t.to_dict() for t in self.transposes],
+            "deltas": [x.to_dict() for x in self.deltas],
+        })
+        return d

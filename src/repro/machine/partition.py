@@ -1,0 +1,439 @@
+"""Partition a Workload across N array groups and compile the schedule.
+
+:func:`plan_machine` is the machine-level compiler: it splits every
+parallel op of a Workload across ``n_parts`` array groups under an
+iso-area :class:`sweep.Geometry` budget, compiles one
+``plan.compile_plan`` LayoutPlan per *distinct shard shape* (partition
+class), prices the machine-level bus traffic once, and itemizes every
+cycle of machine-vs-planner divergence into the
+:class:`~repro.machine.ir.DeltaRow` catalogue.
+
+Sharding rules (DESIGN.md Sec. 13, normative):
+
+* ``kernel`` / ``conv`` ops shard their element axis ``n``; ``matmul``
+  ops shard the output-column axis ``n`` (weight-stationary: each group
+  holds the full k-deep weight columns of its outputs).  Balanced ragged
+  splits: group ``p`` gets ``n//N + 1`` elements iff ``p < n % N``.
+* ``compute`` ops carry explicit machine-calibrated cycles and
+  ``movement`` ops are bus-serial -- neither shards; every class charges
+  them unchanged (compute) or the machine charges them once (movement).
+* An op whose shard is empty in some class is dropped there (the groups
+  idle through it); its dependence edges are bridged so the class DAG
+  stays connected.
+* ``n_parts`` must divide ``geometry.arrays`` -- each class's plan
+  compiles at the per-group geometry ``rows x cols x (arrays//n_parts)``.
+  ``n_parts=1`` passes the whole workload and geometry through
+  unchanged, reducing bit-for-bit to the existing LayoutPlan path.
+
+Movement pricing: operand loads and result readouts are charged *once*
+at machine level, in the executed class's per-step layouts, through the
+same ``op_cost`` Table-2 bus accounting every other layer uses --
+operands broadcast on the shared row bus are not multiplied by N.
+Convolutions additionally charge explicit inter-array ``redistribute``
+halo traffic: ``(active_groups - 1) * (taps - 1) * width`` bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core.cost_model import Layout
+from repro.core.params import SystemParams
+from repro.machine.ir import (DeltaRow, MachineError, MachineSchedule,
+                              MovementStep, PartitionClass, PlacedOp,
+                              TransposeTrafficStep)
+from repro.plan.ir import LayoutPlan
+from repro.plan.scheduler import compile_plan
+from repro.sweep.grid import Geometry, PAPER_GEOMETRY
+from repro.workloads.ir import Op, Workload, op_cost
+
+#: op kinds whose parallel axis shards across array groups
+SHARDED_KINDS = ("kernel", "conv", "matmul")
+
+
+# ---------------------------------------------------------------------------
+# Sharding
+# ---------------------------------------------------------------------------
+
+def shard_extent(op: Op) -> Optional[int]:
+    """The op's shardable parallel extent (None for unshardable kinds)."""
+    if op.kind in SHARDED_KINDS:
+        return op.n
+    return None
+
+
+def class_boundaries(workload: Workload, n_parts: int) -> list[int]:
+    """Group indices where the shard-shape vector changes.
+
+    Group ``p`` gets a ceil shard of op *i* iff ``p < n_i % N``, so the
+    shape vector is constant between consecutive distinct remainders --
+    the returned sorted boundaries start with 0 and partition ``[0, N)``
+    into the schedule's partition classes.
+    """
+    cuts = {0}
+    for op in workload.ops:
+        ext = shard_extent(op)
+        if ext is None:
+            continue
+        r = ext % n_parts
+        if 0 < r < n_parts:
+            cuts.add(r)
+        # ops smaller than N idle the groups beyond their extent; the
+        # boundary at the extent itself separates busy from idle groups
+        if ext < n_parts:
+            cuts.add(ext)
+    return sorted(cuts)
+
+
+def shard_sizes_for(workload: Workload, n_parts: int,
+                    group_start: int) -> tuple:
+    """Per-op shard sizes for the class starting at ``group_start``."""
+    sizes = []
+    for op in workload.ops:
+        ext = shard_extent(op)
+        if ext is None:
+            sizes.append(op.n if op.kind in SHARDED_KINDS else 0)
+            continue
+        base, r = divmod(ext, n_parts)
+        sizes.append(base + (1 if group_start < r else 0))
+    return tuple(sizes)
+
+
+def _shard_op(op: Op, n_p: int) -> Optional[Op]:
+    """The op restricted to one group's shard (None when empty)."""
+    if op.kind not in SHARDED_KINDS:
+        return op
+    if n_p <= 0:
+        return None
+    if n_p == op.n:
+        return op
+    fields = {"n": n_p}
+    if op.kind == "conv" and op.in_elems is not None:
+        # input elements scale with the output shard (nearest integer;
+        # halo overlap is charged explicitly as redistribute traffic)
+        fields["in_elems"] = max(1, (op.in_elems * n_p + op.n // 2) // op.n)
+    return dataclasses.replace(op, **fields)
+
+
+def shard_workload(workload: Workload, shard_sizes) -> \
+        tuple[Optional[Workload], tuple]:
+    """One class's Workload (ops resized to the shard; empty ops dropped
+    with their dependence edges bridged).  Returns ``(workload, kept)``
+    where ``kept`` maps surviving op positions to original indices;
+    ``(None, ())`` when every op dropped (a fully idle class)."""
+    ops, kept = [], []
+    for i, op in enumerate(workload.ops):
+        ext = shard_extent(op)
+        sh = _shard_op(op, shard_sizes[i] if ext is not None else 0)
+        if sh is None:
+            continue
+        ops.append(sh)
+        kept.append(i)
+    if not ops:
+        return None, ()
+    new_index = {orig: j for j, orig in enumerate(kept)}
+    # bridge dropped nodes: successors inherit the dropped op's preds
+    preds: dict[int, set] = {i: set() for i in range(len(workload.ops))}
+    for a, b in workload.edges():
+        preds[b].add(a)
+    resolved: dict[int, set] = {}
+
+    def surviving_preds(i: int) -> set:
+        if i in resolved:
+            return resolved[i]
+        out: set = set()
+        for a in preds[i]:
+            if a in new_index:
+                out.add(a)
+            else:
+                out |= surviving_preds(a)
+        resolved[i] = out
+        return out
+
+    edges = set()
+    for orig in kept:
+        for a in surviving_preds(orig):
+            edges.add((new_index[a], new_index[orig]))
+    # linear chains stay implicit (deps=()) so the chain DP route -- and
+    # therefore bit-for-bit N=1 reduction -- is preserved
+    chain = {(j, j + 1) for j in range(len(ops) - 1)}
+    deps = () if (not workload.deps and edges <= chain) else tuple(
+        sorted(edges))
+    return Workload(name=workload.name, ops=tuple(ops),
+                    source=workload.source,
+                    description=workload.description, deps=deps), tuple(kept)
+
+
+# ---------------------------------------------------------------------------
+# Plan decomposition (movement vs compute per op)
+# ---------------------------------------------------------------------------
+
+def plan_movement_compute(plan: LayoutPlan, workload: Workload,
+                          sys: SystemParams) -> dict:
+    """Per-op ``(movement, compute)`` cycle split of a compiled plan.
+
+    Movement = bus-serial load/readout phases; compute = the
+    capacity-parallel in-array work.  The split is exact:
+    ``sum(mov + comp) + plan.transpose_cycles_total ==
+    plan.total_cycles`` (asserted by the caller).
+    """
+    out: dict[str, tuple[int, int]] = {}
+    for op in workload.ops:
+        mov = comp = 0
+        for s in plan.steps_for(op.name):
+            if op.kind == "movement":
+                mov += s.cycles
+            elif op.kind == "compute":
+                comp += s.cycles
+            elif op.kind == "kernel":
+                c = op_cost(op, s.layout, sys)
+                comp += c.compute
+                mov += s.cycles - c.compute
+            elif s.phase.endswith(".mac"):
+                comp += s.cycles
+            elif op.kind == "matmul" and op.chunk == 0:
+                comp += s.cycles   # streamed MAC: single compute phase
+            else:
+                mov += s.cycles    # .load / .out phases
+        out[op.name] = (mov, comp)
+    return out
+
+
+def _op_step_layouts(plan: LayoutPlan, op_name: str) -> tuple:
+    return tuple(s.layout.value for s in plan.steps_for(op_name))
+
+
+# ---------------------------------------------------------------------------
+# Machine-level movement pricing
+# ---------------------------------------------------------------------------
+
+def _machine_movement(workload: Workload, sys: SystemParams,
+                      layouts_for: Callable[[str], tuple],
+                      active_groups: dict, n_parts: int) -> list:
+    """Machine-level MovementSteps: whole-op loads/readouts charged once
+    on the shared bus, plus explicit conv halo redistribution."""
+    bw = sys.row_bandwidth_bits
+    steps: list[MovementStep] = []
+    for op in workload.ops:
+        if op.kind == "compute":
+            continue
+        if op.kind == "movement":
+            steps.append(MovementStep(
+                op=op.name, phase="bus", bits=op.bits,
+                cycles=op_cost(op, Layout.BP, sys).load))
+            continue
+        if op.kind == "matmul" and op.chunk == 0:
+            continue   # streamed MAC: movement is explicit movement ops
+        lays = layouts_for(op.name)
+        if op.kind == "kernel":
+            lay = Layout(lays[0]) if lays else Layout.BP
+            c = op_cost(op, lay, sys)
+            if c.load:
+                steps.append(MovementStep(
+                    op=op.name, phase="load", bits=float(c.load * bw),
+                    cycles=c.load, layout=lay.value))
+            if c.readout:
+                steps.append(MovementStep(
+                    op=op.name, phase="readout",
+                    bits=float(c.readout * bw), cycles=c.readout,
+                    layout=lay.value))
+        else:   # conv / chunked matmul: 3 phases, per-phase layouts
+            load_lay = Layout(lays[0]) if lays else Layout.BP
+            out_lay = Layout(lays[2]) if len(lays) > 2 else load_lay
+            steps.append(MovementStep(
+                op=op.name, phase="load",
+                bits=float(op_cost(op, load_lay, sys).load * bw),
+                cycles=op_cost(op, load_lay, sys).load,
+                layout=load_lay.value))
+            steps.append(MovementStep(
+                op=op.name, phase="readout",
+                bits=float(op_cost(op, out_lay, sys).readout * bw),
+                cycles=op_cost(op, out_lay, sys).readout,
+                layout=out_lay.value))
+            if op.kind == "conv" and n_parts > 1:
+                groups = active_groups.get(op.name, n_parts)
+                if groups > 1:
+                    bits = (groups - 1) * max(0, op.k - 1) * op.width
+                    if bits:
+                        steps.append(MovementStep(
+                            op=op.name, phase="redistribute",
+                            bits=float(bits), cycles=sys.xfer_cycles(bits),
+                            layout=load_lay.value))
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# The machine compiler
+# ---------------------------------------------------------------------------
+
+def _default_compile(wl: Workload, sys: SystemParams, *,
+                     initial_layout=None,
+                     enforce_feasibility=False) -> LayoutPlan:
+    return compile_plan(wl, sys, initial_layout=initial_layout,
+                        enforce_feasibility=enforce_feasibility)
+
+
+def plan_machine(workload: Workload,
+                 geometry: Geometry = PAPER_GEOMETRY,
+                 n_parts: Optional[int] = None, *,
+                 initial_layout: Optional[Layout] = None,
+                 enforce_feasibility: bool = False,
+                 compile_fn: Optional[Callable] = None) -> MachineSchedule:
+    """Compile ``workload`` into a :class:`MachineSchedule` over
+    ``n_parts`` array groups of ``geometry`` (default: one group per
+    array).
+
+    ``compile_fn(workload, sys, *, initial_layout, enforce_feasibility)
+    -> LayoutPlan`` overrides the per-partition plan compiler -- the
+    serving path routes it through the content-addressed plan cache
+    (``PlanService.compile_machine``).
+    """
+    if n_parts is None:
+        n_parts = geometry.arrays
+    if n_parts < 1:
+        raise MachineError(f"n_parts must be >= 1 (got {n_parts})")
+    if geometry.arrays % n_parts:
+        raise MachineError(
+            f"n_parts={n_parts} does not divide the machine's "
+            f"{geometry.arrays} arrays (iso-area groups must be equal)")
+    compile_fn = compile_fn or _default_compile
+    arrays_per_group = geometry.arrays // n_parts
+    group_geom = Geometry(rows=geometry.rows, cols=geometry.cols,
+                          arrays=arrays_per_group,
+                          row_bandwidth_bits=geometry.row_bandwidth_bits)
+    sys_g = geometry.system()          # whole machine
+    sys_p = group_geom.system()        # one array group
+
+    # ---- whole-machine reference plan (the N=1 path) -------------------
+    planner_plan = compile_fn(workload, sys_g,
+                              initial_layout=initial_layout,
+                              enforce_feasibility=enforce_feasibility)
+    planner_mc = plan_movement_compute(planner_plan, workload, sys_g)
+    _check_split(planner_plan, planner_mc, workload.name, "planner")
+
+    # ---- partition classes ---------------------------------------------
+    bounds = class_boundaries(workload, n_parts)
+    classes: list[PartitionClass] = []
+    placed: list[PlacedOp] = []
+    class_mc: list[dict] = []
+    for ci, start in enumerate(bounds):
+        end = bounds[ci + 1] if ci + 1 < len(bounds) else n_parts
+        sizes = shard_sizes_for(workload, n_parts, start)
+        if n_parts == 1:
+            cls_w, kept = workload, tuple(range(len(workload.ops)))
+            plan: Optional[LayoutPlan] = planner_plan   # bit-for-bit reuse
+        else:
+            cls_w, kept = shard_workload(workload, sizes)
+            plan = None if cls_w is None else compile_fn(
+                cls_w, sys_p, initial_layout=initial_layout,
+                enforce_feasibility=enforce_feasibility)
+        mc = ({} if plan is None
+              else plan_movement_compute(plan, cls_w, sys_p))
+        if plan is not None:
+            _check_split(plan, mc, workload.name, f"class {ci}")
+        class_mc.append(mc)
+        comp = sum(c for _, c in mc.values())
+        mov = sum(m for m, _ in mc.values())
+        classes.append(PartitionClass(
+            index=ci, groups=end - start, arrays_per_group=arrays_per_group,
+            geometry=group_geom, shard_sizes=sizes, plan=plan,
+            compute_cycles=comp, movement_cycles=mov,
+            transpose_cycles=(plan.transpose_cycles_total
+                              if plan is not None else 0)))
+        for j, orig in enumerate(kept):
+            op = workload.ops[orig]
+            m, c = mc[op.name]
+            placed.append(PlacedOp(
+                op=op.name, op_index=orig, kind=op.kind, cls=ci,
+                shard_n=(sizes[orig] if shard_extent(op) is not None
+                         else op.n),
+                groups=end - start,
+                layouts=_op_step_layouts(plan, op.name),
+                compute_cycles=c, movement_cycles=m))
+
+    # ---- executed (critical) class: slowest per-group parallel section -
+    exec_class = max(range(len(classes)),
+                     key=lambda i: (classes[i].compute_cycles
+                                    + classes[i].transpose_cycles))
+    crit = classes[exec_class]
+    exec_mc = class_mc[exec_class]
+
+    def layouts_for(op_name: str) -> tuple:
+        if crit.plan is not None:
+            lays = _op_step_layouts(crit.plan, op_name)
+            if lays:
+                return lays
+        return _op_step_layouts(planner_plan, op_name)
+
+    active_groups = {}
+    for op in workload.ops:
+        ext = shard_extent(op)
+        if ext is not None:
+            active_groups[op.name] = min(ext, n_parts)
+    movement = _machine_movement(workload, sys_g, layouts_for,
+                                 active_groups, n_parts)
+
+    transposes = tuple(
+        TransposeTrafficStep(cls=exec_class, before_step=t.before_step,
+                             direction=t.direction, cycles=t.cycles,
+                             groups=crit.groups)
+        for t in (crit.plan.transposes if crit.plan is not None else ()))
+
+    compute_cycles = crit.compute_cycles
+    movement_cycles = sum(m.cycles for m in movement)
+    transpose_cycles = crit.transpose_cycles
+
+    # ---- delta catalogue (machine minus planner, itemized) -------------
+    deltas: list[DeltaRow] = []
+    for op in workload.ops:
+        p_mov, p_comp = planner_mc[op.name]
+        m_comp = exec_mc.get(op.name, (0, 0))[1]
+        if m_comp != p_comp:
+            if op.name not in exec_mc:
+                reason = "idle-in-exec-class (shard empty)"
+            elif layouts_for(op.name) != _op_step_layouts(planner_plan,
+                                                          op.name):
+                reason = "layout-divergence (class plan chose differently)"
+            else:
+                reason = ("partition-batching (ragged ceil at the "
+                          "per-group geometry)")
+            deltas.append(DeltaRow(source="compute", op=op.name,
+                                   cycles=m_comp - p_comp, reason=reason))
+        m_mov = sum(m.cycles for m in movement
+                    if m.op == op.name and m.phase != "redistribute")
+        if m_mov != p_mov:
+            deltas.append(DeltaRow(
+                source="movement", op=op.name, cycles=m_mov - p_mov,
+                reason="layout-divergence movement pricing"))
+    for m in movement:
+        if m.phase == "redistribute":
+            deltas.append(DeltaRow(
+                source="redistribute", op=m.op, cycles=m.cycles,
+                reason="conv halo redistribution (inter-array)"))
+    t_delta = transpose_cycles - planner_plan.transpose_cycles_total
+    if t_delta:
+        deltas.append(DeltaRow(
+            source="transpose", op="", cycles=t_delta,
+            reason="per-group boundary transposes (parallel replicas "
+                   "charged once)"))
+
+    return MachineSchedule(
+        workload=workload.name, geometry=geometry, n_partitions=n_parts,
+        exec_class=exec_class, classes=tuple(classes), placed=tuple(placed),
+        movement=tuple(movement), transposes=transposes,
+        compute_cycles=compute_cycles, movement_cycles=movement_cycles,
+        transpose_cycles=transpose_cycles,
+        planner_total=planner_plan.total_cycles,
+        planner_static_bp=planner_plan.static_bp,
+        planner_static_bs=planner_plan.static_bs,
+        deltas=tuple(deltas),
+        initial_layout=initial_layout.value if initial_layout else None)
+
+
+def _check_split(plan: LayoutPlan, mc: dict, name: str, what: str) -> None:
+    """The movement/compute split must be exact (internal invariant)."""
+    total = sum(m + c for m, c in mc.values()) + plan.transpose_cycles_total
+    if total != plan.total_cycles:
+        raise MachineError(
+            f"{name}: {what} movement/compute split ({total}) does not "
+            f"reproduce the plan total ({plan.total_cycles})")

@@ -20,6 +20,7 @@ benchmarks/executor_bench.py.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import NamedTuple, Optional, Union
 
 import jax
@@ -221,7 +222,37 @@ def execute(program: Program,
     return ExecResult(CSArray(st.cells), st.carry, st.acc, program.cycles)
 
 
-_BATCHED_CACHE: dict = {}
+#: LRU of compiled `jit(vmap(run))` callables, keyed by the (hashable)
+#: program.  Machine-level partitioning can lower thousands of distinct
+#: per-partition programs; the bound keeps the host-side compilation
+#: cache from growing without limit (evicted programs just recompile).
+_BATCHED_CACHE: "OrderedDict" = OrderedDict()
+_BATCHED_CACHE_LIMIT = 64
+_BATCHED_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def set_batched_cache_limit(limit: int) -> int:
+    """Resize the batched-runner LRU (evicting down if needed); returns
+    the previous limit."""
+    global _BATCHED_CACHE_LIMIT
+    if limit < 1:
+        raise ValueError(f"cache limit must be >= 1, got {limit}")
+    prev, _BATCHED_CACHE_LIMIT = _BATCHED_CACHE_LIMIT, limit
+    while len(_BATCHED_CACHE) > limit:
+        _BATCHED_CACHE.popitem(last=False)
+        _BATCHED_CACHE_STATS["evictions"] += 1
+    return prev
+
+
+def batched_cache_stats() -> dict:
+    """Hit/miss/eviction counters plus current size and limit."""
+    return dict(_BATCHED_CACHE_STATS, size=len(_BATCHED_CACHE),
+                limit=_BATCHED_CACHE_LIMIT)
+
+
+def clear_batched_cache() -> None:
+    _BATCHED_CACHE.clear()
+    _BATCHED_CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
 
 def run_batched(program: Program, cells: jax.Array) -> ExecState:
@@ -233,8 +264,15 @@ def run_batched(program: Program, cells: jax.Array) -> ExecState:
     share a name never collide."""
     fn = _BATCHED_CACHE.get(program)
     if fn is None:
+        _BATCHED_CACHE_STATS["misses"] += 1
         fn = jax.jit(jax.vmap(make_runner(program)))
         _BATCHED_CACHE[program] = fn
+        while len(_BATCHED_CACHE) > _BATCHED_CACHE_LIMIT:
+            _BATCHED_CACHE.popitem(last=False)
+            _BATCHED_CACHE_STATS["evictions"] += 1
+    else:
+        _BATCHED_CACHE_STATS["hits"] += 1
+        _BATCHED_CACHE.move_to_end(program)
     return fn(cells)
 
 

@@ -127,3 +127,42 @@ class PlanService:
 
     def compile_many(self, requests) -> list[CompiledRequest]:
         return [self.compile(r) for r in requests]
+
+    # ------------------------------------------------------------- machine
+    def compile_machine(self, request: Request, *, geometry=None,
+                        n_parts: Optional[int] = None):
+        """Compile the request into a machine-level
+        :class:`~repro.machine.ir.MachineSchedule` (the whole-machine
+        layer above the per-request LayoutPlan).
+
+        Every per-class plan compiles through the content-addressed plan
+        cache -- partition classes repeat across requests sharing an
+        operating point, so a hot serving mix compiles each shard shape
+        once per fingerprint.  Returns the schedule; its per-class plans
+        are genuine planner products, so the batcher's phase signatures
+        keep working on ``schedule.classes[i].plan``.
+        """
+        from repro.machine.partition import plan_machine
+        from repro.sweep.grid import Geometry
+
+        geo = geometry or Geometry.from_system(self.sys)
+        w = self.workload_for(request)
+
+        def cached_compile(wl, sys, *, initial_layout=None,
+                           enforce_feasibility=False):
+            init = (Layout(initial_layout)
+                    if isinstance(initial_layout, str) else initial_layout)
+            plan, _key, _hit = self.cache.get_or_compile(
+                wl, sys,
+                lambda: self.planner.compile(wl, sys, initial_layout=init),
+                provenance={"arch": request.arch,
+                            "tokens": request.tokens,
+                            "weight_bits": request.weight_bits,
+                            "machine": geo.label()},
+                initial_layout=(init.value if init is not None else None))
+            return plan
+
+        init = (Layout(self.initial_layout)
+                if self.initial_layout is not None else None)
+        return plan_machine(w, geo, n_parts, initial_layout=init,
+                            compile_fn=cached_compile)

@@ -135,3 +135,57 @@ def test_characterize_bad_bandwidth_suffix_exits_cleanly():
     assert proc.returncode != 0
     assert "bad --geometry" in proc.stderr
     assert "Traceback" not in proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# --arrays threading + machine-bench (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def test_characterize_arrays_override_changes_cycles():
+    base = run_cli("characterize", "mk/multu", "--backends", "analytic")
+    scaled = run_cli("characterize", "mk/multu", "--backends", "analytic",
+                     "--arrays", "4")
+    assert base.returncode == 0 and scaled.returncode == 0
+    assert base.stdout != scaled.stdout
+
+
+def test_characterize_bad_arrays_exits_cleanly():
+    proc = run_cli("characterize", "mk/multu", "--arrays", "-1")
+    assert proc.returncode != 0
+    assert "--arrays" in proc.stderr
+    assert "Traceback" not in proc.stderr
+
+
+def test_plan_arrays_override_threads_geometry(tmp_path):
+    base = run_cli("plan", "vgg16")
+    scaled = run_cli("plan", "vgg16", "--arrays", "16", "--geometry",
+                     "128x512x512")
+    assert base.returncode == 0 and scaled.returncode == 0
+    assert base.stdout != scaled.stdout  # fewer arrays -> more batches
+
+
+def test_machine_bench_writes_schema_valid_artifact(tmp_path):
+    proc = run_cli("machine-bench", "--workload", "vgg16",
+                   "--geometries", "2", "--no-execute", "--no-diff",
+                   artifact_dir=tmp_path)
+    assert proc.returncode == 0, proc.stderr
+    env = json.loads((tmp_path / "machine.json").read_text())
+    assert env["artifact"] == "machine"
+    assert env["schema_version"] == 1
+    art = env["payload"]
+    assert art["workload"] == "vgg16"
+    assert art["gate_failures"] == []
+    assert len(art["curve"]) == 2
+    for pt in art["curve"]:
+        if "error" in pt:
+            continue
+        assert pt["explained"] is True
+        assert pt["total_cycles"] == (pt["compute_cycles"]
+                                      + pt["movement_cycles"]
+                                      + pt["transpose_cycles"])
+
+
+def test_machine_bench_unknown_workload_fails():
+    proc = run_cli("machine-bench", "--workload", "no/such_app",
+                   "--no-execute", "--no-diff")
+    assert proc.returncode != 0

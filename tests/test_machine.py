@@ -1,0 +1,244 @@
+"""Machine-level schedule IR tests (ISSUE 8).
+
+Partitioner invariants (shard sums, class coverage, ragged splits,
+N=1 bit-for-bit reduction, the PlanError feasibility sentinel), the
+end-to-end delta-catalogue identity, the execution engine's
+executed-vs-scheduled gates, the serving hook, and the batched-runner
+LRU regression.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.cost_model import Layout
+from repro.machine import (
+    MachineError,
+    class_boundaries,
+    execute_schedule,
+    plan_machine,
+    run_diff,
+    shard_sizes_for,
+    shard_workload,
+)
+from repro.plan import PlanError, compile_plan
+from repro.sweep.grid import Geometry, PAPER_GEOMETRY
+from repro.workloads import get_workload
+from repro.workloads.ir import Op, workload
+
+
+# ---------------------------------------------------------------------------
+# Partitioner invariants
+# ---------------------------------------------------------------------------
+
+def ragged_workload():
+    """3 sharded ops with awkward extents (none divisible by 4)."""
+    return workload("ragged", [
+        Op(name="k1", kind="kernel", kernel="multu", n=1027, width=16),
+        Op(name="mm", kind="matmul", m=4, k=64, n=10, width=16, chunk=8),
+        Op(name="cv", kind="conv", k=9, n=333, width=16),
+    ])
+
+
+@pytest.mark.parametrize("n_parts", (1, 2, 4, 7, 512))
+def test_shard_sizes_sum_to_extent(n_parts):
+    w = ragged_workload()
+    bounds = class_boundaries(w, n_parts)
+    assert bounds[0] == 0 and bounds == sorted(set(bounds))
+    groups = [(bounds[i], bounds[i + 1] if i + 1 < len(bounds) else n_parts)
+              for i in range(len(bounds))]
+    assert sum(e - s for s, e in groups) == n_parts  # classes cover N
+    for i, op in enumerate(w.ops):
+        total = sum((e - s) * shard_sizes_for(w, n_parts, s)[i]
+                    for s, e in groups)
+        assert total == op.n, op.name
+
+
+def test_shard_workload_drops_empty_and_bridges_deps():
+    w = workload("chain", [
+        Op(name="a", kind="kernel", kernel="multu", n=8, width=16),
+        Op(name="b", kind="kernel", kernel="multu", n=0, width=16),
+        Op(name="c", kind="kernel", kernel="multu", n=8, width=16),
+    ], deps=((0, 1), (1, 2)))
+    sub, kept = shard_workload(w, (8, 0, 8))
+    assert kept == (0, 2)
+    assert [op.name for op in sub.ops] == ["a", "c"]
+    assert sub.deps == ((0, 1),)  # a -> c bridged through dropped b
+
+
+def test_conv_shard_scales_in_elems():
+    w = workload("conv", [Op(name="cv", kind="conv", k=9, n=100,
+                             in_elems=400, width=16)])
+    sub, _ = shard_workload(w, (25,))
+    assert sub.ops[0].n == 25
+    assert sub.ops[0].in_elems == 100  # input scales with the shard
+
+
+@pytest.mark.parametrize("name", ("vgg16", "aes", "mk/multu"))
+def test_n1_reduces_bit_for_bit(name):
+    w = get_workload(name)
+    s = plan_machine(w, n_parts=1)
+    p = compile_plan(w, PAPER_GEOMETRY.system())
+    assert s.total_cycles == p.total_cycles == s.planner_total
+    assert s.deltas == () and s.explained
+    assert len(s.classes) == 1
+    assert s.classes[0].plan.total_cycles == p.total_cycles
+
+
+@pytest.mark.parametrize("name,n_parts", [
+    ("vgg16", 4), ("vgg16", 512), ("aes", 512),
+    ("mk/multu", 512), ("mk/reduction", 512), ("conv2d", 8),
+])
+def test_delta_catalogue_explains_every_cycle(name, n_parts):
+    s = plan_machine(get_workload(name), n_parts=n_parts)
+    assert s.explained, (s.total_cycles, s.planner_total, s.delta_total)
+    assert sum(c.groups for c in s.classes) == n_parts
+    assert s.arrays_total == PAPER_GEOMETRY.arrays
+
+
+def test_ragged_split_explained_and_covers_extents():
+    w = ragged_workload()
+    s = plan_machine(w, n_parts=4)
+    assert s.explained
+    for op in w.ops:
+        shards = s.classes_for(op.name)
+        total = sum(p.shard_n * p.groups for p in shards)
+        assert total == op.n, op.name
+
+
+def test_bad_partition_count_raises():
+    w = get_workload("mk/multu")
+    with pytest.raises(MachineError):
+        plan_machine(w, n_parts=3)  # 3 does not divide 512 arrays
+    with pytest.raises(MachineError):
+        plan_machine(w, n_parts=0)
+
+
+def test_row_overflow_raises_plan_error_sentinel():
+    # kernel feasibility is the live-words row model: at rows=2 even the
+    # BP footprint of multu overflows, in every partition class
+    w = workload("fat", [Op(name="fat", kind="kernel", kernel="multu",
+                            n=64, width=16)])
+    tiny = Geometry(rows=2, cols=512, arrays=4)
+    # mis-pricing silently is the failure mode; the sentinel must fire
+    with pytest.raises(PlanError):
+        plan_machine(w, tiny, n_parts=4, enforce_feasibility=True)
+    s = plan_machine(w, tiny, n_parts=4)  # advisory mode still schedules
+    assert s.explained
+
+
+def test_geometry_threading_changes_class_geometry():
+    geo = Geometry(rows=64, cols=512, arrays=1024)
+    s = plan_machine(get_workload("vgg16"), geo)
+    assert s.geometry == geo and s.n_partitions == 1024
+    for c in s.classes:
+        assert c.geometry.rows == 64 and c.arrays_per_group == 1
+
+
+# ---------------------------------------------------------------------------
+# IR serialization
+# ---------------------------------------------------------------------------
+
+def test_schedule_to_dict_round_trips_summary():
+    s = plan_machine(get_workload("vgg16"), n_parts=8)
+    d = s.to_dict()
+    assert d["n_partitions"] == 8
+    assert d["total_cycles"] == s.total_cycles
+    assert len(d["classes"]) == len(s.classes)
+    assert len(d["deltas"]) == len(s.deltas)
+    assert {m["phase"] for m in d["movement"]} <= {
+        "load", "readout", "bus", "redistribute"}
+    assert all(set(p) >= {"op", "cls", "shard_n", "layouts"}
+               for p in d["placed"])
+
+
+# ---------------------------------------------------------------------------
+# Execution engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ("vgg16", "aes", "mk/multu",
+                                  "mk/reduction"))
+def test_executed_rows_all_explained_static(name):
+    w = get_workload(name)
+    s = plan_machine(w, n_parts=8)
+    res = execute_schedule(s, w, functional=False)
+    assert res["unexplained"] == []
+    assert all(r["explained"] for r in res["rows"])
+    assert res["scheduled_compute"] == s.compute_cycles
+
+
+def test_functional_execution_simulates_all_arrays():
+    geo = Geometry(rows=128, cols=512, arrays=8)
+    w = get_workload("vgg16")
+    s = plan_machine(w, geo)
+    res = execute_schedule(s, w, functional=True, collect_hlo=True)
+    assert res["unexplained"] == []
+    assert res["arrays_simulated"] >= 8
+    assert {p["name"] for p in res["programs"]} == {"multu", "vector_add"}
+    io = res["io"]
+    assert io is not None and io["hlo_boundary_bytes"] > 0
+    assert io["model_io_bytes"] > 0
+
+
+def test_diff_harness_green_small_scope():
+    rows, fails = run_diff(("mk/multu", "aes"), parts=(1, 4),
+                           execute=True, functional=False)
+    assert fails == []
+    assert all(r.status == "ok" for r in rows)
+    assert {r.n_parts for r in rows} == {1, 4}
+
+
+# ---------------------------------------------------------------------------
+# Serving hook
+# ---------------------------------------------------------------------------
+
+def test_plan_service_compile_machine_uses_cache():
+    from repro.serve import PlanCache, PlanService, TrafficMix
+
+    service = PlanService(cache=PlanCache(persist=False))
+    req = TrafficMix.default().sample(1, seed=0)[0]
+    s1 = service.compile_machine(req, n_parts=4)
+    misses = service.cache.misses
+    assert s1.explained and misses > 0
+    s2 = service.compile_machine(req, n_parts=4)
+    assert service.cache.misses == misses  # warm pass fully cache-served
+    assert s2.total_cycles == s1.total_cycles
+
+
+# ---------------------------------------------------------------------------
+# Batched-runner LRU (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_batched_cache_lru_bounds_and_counts():
+    import jax.numpy as jnp
+
+    from repro.pim import executor as ex
+    from repro.pim.programs import build
+
+    progs = [build(k, lay, width=16)
+             for k in ("multu", "vector_add", "equal")
+             for lay in (Layout.BP, Layout.BS)]
+    prev = ex.set_batched_cache_limit(2)
+    try:
+        ex.clear_batched_cache()
+        for p in progs:
+            cols = 512 if p.layout is Layout.BS else 512
+            ex.run_batched(p, jnp.zeros((2, p.rows, cols), bool))
+        stats = ex.batched_cache_stats()
+        assert stats["size"] <= 2 and stats["limit"] == 2
+        assert stats["misses"] == len(progs)
+        assert stats["evictions"] == len(progs) - 2
+        # LRU order: the most recent program is a hit, the oldest re-misses
+        ex.run_batched(progs[-1], jnp.zeros((2, progs[-1].rows, 512), bool))
+        assert ex.batched_cache_stats()["hits"] == 1
+        ex.run_batched(progs[0], jnp.zeros((2, progs[0].rows, 512), bool))
+        assert ex.batched_cache_stats()["misses"] == len(progs) + 1
+    finally:
+        ex.set_batched_cache_limit(prev)
+        ex.clear_batched_cache()
+
+
+def test_batched_cache_limit_validation():
+    from repro.pim import executor as ex
+
+    with pytest.raises(ValueError):
+        ex.set_batched_cache_limit(0)
