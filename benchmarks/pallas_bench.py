@@ -1,0 +1,36 @@
+"""pallas-bench entrypoint for the benchmark driver.
+
+Thin wrapper over :func:`repro.kernels.bench.run_pallas_bench` -- the
+full-problem (un-clamped) BP vs fused/unfused BS trajectory that
+``python -m repro pallas-bench`` commits to ``BENCH_pallas.json``.  Here
+it runs a reduced case set (smallest shape, one low and one full width)
+so ``benchmarks/run.py --quick`` exercises the entrypoint without the
+full timing budget; the derived field carries the fused/unfused ratio
+the fusion exists to improve.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, quick
+from repro.kernels.bench import run_pallas_bench
+
+
+def pallas_trajectory() -> list[str]:
+    shapes = (("vgg_fc", (1, 512, 512)),)
+    widths = (4, 16) if quick() else (1, 4, 8, 16)
+    payload = run_pallas_bench(quick=quick(), reps=1 if quick() else 3,
+                               shapes=shapes, widths=widths)
+    rows = []
+    by_name = {c["name"]: c for c in payload["cases"]}
+    for c in payload["cases"]:
+        derived = f"path={c['path']};width={c['width']}"
+        if c["path"] == "bs_fused":
+            unfused = by_name.get(
+                c["name"].replace("bs_fused", "bs_unfused"))
+            if unfused and c["us"]:
+                derived += f";unfused_over_fused={unfused['us'] / c['us']:.2f}"
+        rows.append(emit(f"pallas.{c['name'].replace('/', '.')}",
+                         c["us"], derived))
+    return rows
+
+
+ALL = [pallas_trajectory]

@@ -26,14 +26,14 @@ def main(argv=None) -> int:
     # import AFTER the env knob so benches see the quick-mode setting
     from benchmarks import (
         executor_bench, kernels_bench, machine_bench, paper_tables_bench,
-        plan_bench, roofline_bench, serve_bench, sweep_bench,
+        pallas_bench, plan_bench, roofline_bench, serve_bench, sweep_bench,
     )
 
     print("name,us_per_call,derived")
     total, matched = 0, 0
-    for mod in (paper_tables_bench, kernels_bench, executor_bench,
-                roofline_bench, sweep_bench, plan_bench, serve_bench,
-                machine_bench):
+    for mod in (paper_tables_bench, kernels_bench, pallas_bench,
+                executor_bench, roofline_bench, sweep_bench, plan_bench,
+                serve_bench, machine_bench):
         for fn in mod.ALL:
             for row in fn():
                 total += 1

@@ -35,6 +35,13 @@ Subcommands:
                        ``bench-artifacts/serve.json``.  ``--baseline``
                        gates p99 execute latency against a committed
                        artifact (the CI bench-smoke regression check).
+* ``pallas-bench``  -- time the grid-tiled Pallas kernels over the full
+                       (un-clamped) Table-5/6 matmul shapes: BP word
+                       kernel vs fused and unfused BS bitplane kernels
+                       per weight width.  Writes ``BENCH_pallas.json``
+                       (versioned envelope); ``--baseline`` gates every
+                       per-case median against the committed artifact
+                       (exit 3 on regression, like serve-bench).
 * ``trace-diff``    -- the differential harness: reconcile the
                        jaxpr-traced ``traced/<id>`` workloads against the
                        hand-written ``arch/<id>`` formulas op by op
@@ -64,6 +71,8 @@ Examples::
     python -m repro guidelines
     python -m repro serve-bench --requests 4096
     python -m repro serve-bench --quick --baseline bench-artifacts/serve.json
+    python -m repro plan traced/vgg16 --initial-layout BP --pallas
+    python -m repro pallas-bench --quick --baseline BENCH_pallas.json
     python -m repro list --source traced
     python -m repro characterize traced/tinyllama_1_1b --ops
     python -m repro trace-diff --quick
@@ -242,6 +251,27 @@ def cmd_plan(args) -> int:
         d = p.to_dict(include_steps=not args.quick)
         if args.json:
             full[name] = p.to_dict()
+        if args.pallas:
+            from repro.plan import (lower_plan_pallas, synth_inputs,
+                                    time_schedule)
+
+            sched = lower_plan_pallas(p, w)
+            rows = time_schedule(sched, synth_inputs(sched),
+                                 reps=args.reps)
+            d["pallas"] = {"fuse_pack": sched.fuse_pack,
+                           "n_repacks": sched.n_repacks, "steps": rows}
+            if args.json:
+                full[name]["pallas"] = d["pallas"]
+            for r in rows:
+                tag = f" +{r['repack']}" if r["repack"] else ""
+                if r["us"] is None:
+                    print(f"  pallas {r['op']} [{r['layout']}{tag}]: "
+                          f"-- ({r['note']})")
+                else:
+                    print(f"  pallas {r['op']} [{r['layout']}{tag}]: "
+                          f"{r['kernel']} dims={r['dims']} "
+                          f"padded={r['padded_dims']} "
+                          f"median_us={r['us']:.0f}")
         if args.execute:
             rows = replay_plan(p, w, system)
             d["replay"] = rows
@@ -401,6 +431,60 @@ def cmd_serve_bench(args) -> int:
         ok, msg = check_regression(payload, baseline,
                                    threshold=args.regress_threshold,
                                    floor_us=args.regress_floor_us)
+        print(f"# regression gate: {msg} -> {'OK' if ok else 'FAIL'}")
+        if not ok:
+            return 3
+    return 0
+
+
+def cmd_pallas_bench(args) -> int:
+    from repro.artifacts import ArtifactError, read_artifact, write_artifact
+    from repro.kernels.bench import (check_pallas_regression,
+                                     run_pallas_bench)
+
+    # read the baseline BEFORE the run (the serve-bench idiom: committed
+    # artifact and fresh output may point at the same path)
+    baseline = None
+    if args.baseline:
+        try:
+            baseline = read_artifact(args.baseline, "pallas")
+        except FileNotFoundError:
+            print(f"# no baseline at {args.baseline}; gate skipped")
+        except ArtifactError as e:
+            print(f"error: bad baseline: {e}", file=sys.stderr)
+            return 2
+
+    shapes = None
+    if args.shape:
+        from repro.kernels.bench import BENCH_SHAPES
+        known = dict(BENCH_SHAPES)
+        bad = [s for s in args.shape if s not in known]
+        if bad:
+            print(f"error: unknown shape(s) {bad}; "
+                  f"known: {sorted(known)}", file=sys.stderr)
+            return 2
+        shapes = tuple((s, known[s]) for s in args.shape)
+
+    payload = run_pallas_bench(quick=args.quick, reps=args.reps,
+                               seed=args.seed, shapes=shapes)
+    print(f"pallas-bench: {len(payload['cases'])} cases, "
+          f"reps={payload['reps']} quick={payload['quick']}")
+    for c in payload["cases"]:
+        m, k, n = c["shape"]
+        print(f"  {c['name']:24s} {m}x{k}x{n} "
+              f"padded={'x'.join(map(str, c['padded']))} "
+              f"median_us={c['us']:.0f}")
+
+    path = args.out or os.path.join(_artifact_dir(), "BENCH_pallas.json")
+    write_artifact(path, "pallas", payload,
+                   generated_by="python -m repro pallas-bench"
+                                + (" --quick" if args.quick else ""))
+    print(f"# wrote {path}")
+
+    if baseline is not None:
+        ok, msg = check_pallas_regression(
+            payload, baseline, threshold=args.regress_threshold,
+            floor_us=args.regress_floor_us)
         print(f"# regression gate: {msg} -> {'OK' if ok else 'FAIL'}")
         if not ok:
             return 3
@@ -568,6 +652,13 @@ def main(argv=None) -> int:
     p_plan.add_argument("--execute", action="store_true",
                         help="replay executable ops on the micro-op "
                              "executor (predicted vs executed cycles)")
+    p_plan.add_argument("--pallas", action="store_true",
+                        help="lower the plan to a Pallas kernel schedule "
+                             "and time each measured step (median wall-"
+                             "clock over --reps launches)")
+    p_plan.add_argument("--reps", type=int, default=5,
+                        help="timing repetitions per --pallas step "
+                             "(default 5)")
     p_plan.add_argument("--quick", action="store_true",
                         help="CI smoke: all table6 apps, summaries to "
                              "bench-artifacts/plans.json")
@@ -639,6 +730,38 @@ def main(argv=None) -> int:
     p_serve.add_argument("--json", default=None, metavar="PATH",
                          help="dump the full payload (pre-envelope) as JSON")
     p_serve.set_defaults(fn=cmd_serve_bench)
+
+    p_pb = sub.add_parser(
+        "pallas-bench",
+        help="time the grid-tiled Pallas kernels over the full "
+             "Table-5/6 matmul shapes (BP vs fused/unfused BS per "
+             "width); writes + gates BENCH_pallas.json")
+    p_pb.add_argument("--quick", action="store_true",
+                      help="CI smoke: reps=2, widths {4,8,16}")
+    p_pb.add_argument("--reps", type=int, default=None,
+                      help="timing repetitions per case "
+                           "(default 5; --quick default 2)")
+    p_pb.add_argument("--seed", type=int, default=0,
+                      help="operand sampling seed")
+    p_pb.add_argument("--shape", action="append", default=[],
+                      metavar="NAME",
+                      help="restrict to named bench shape(s) (e.g. "
+                           "gemv, vgg_fc_out); repeatable; default all")
+    p_pb.add_argument("--out", default=None, metavar="PATH",
+                      help="artifact path (default "
+                           "<artifact-dir>/BENCH_pallas.json)")
+    p_pb.add_argument("--baseline", default=None, metavar="PATH",
+                      help="committed BENCH_pallas.json to gate per-case "
+                           "medians against (read before this run's "
+                           "artifact is written); exit 3 on regression")
+    p_pb.add_argument("--regress-threshold", type=float, default=0.5,
+                      help="per-case median regression budget "
+                           "(fraction over baseline; default 0.5)")
+    p_pb.add_argument("--regress-floor-us", type=float, default=2000.0,
+                      help="timer-noise floor: baselines are clamped up "
+                           "to this before the ratio, so sub-floor "
+                           "medians never gate (default 2000)")
+    p_pb.set_defaults(fn=cmd_pallas_bench)
 
     p_diff = sub.add_parser(
         "trace-diff",

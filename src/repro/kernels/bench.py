@@ -1,0 +1,140 @@
+"""pallas-bench: the measured wall-clock trajectory of the Pallas kernels.
+
+One run times every (shape, width, kernel-path) case over the *full*
+un-clamped problem -- the Table-5/Table-6 matmul shapes (GEMM 400^3,
+GEMV 1x4096x512, the VGG classifier FCs) at weight widths {1, 4, 8, 16}
+-- through three paths:
+
+* ``bp``          -- the grid-tiled bit-parallel word kernel,
+* ``bs_fused``    -- the one-kernel fused bitpack-matmul,
+* ``bs_unfused``  -- ``pack_weights`` -> ``matmul_bs`` with the pack pass
+  *on* the timed path (the materialized-plane-artifact cost fusion
+  removes; the fused-vs-unfused delta is the point of the comparison).
+
+Each case is the median of ``reps`` post-warmup calls with
+``block_until_ready``.  The payload is committed to ``BENCH_pallas.json``
+under the ``repro.artifacts`` envelope and gated in CI by
+:func:`check_pallas_regression` (per-case medians, noise-tolerant
+threshold + floor, exit 3 on regression -- the serve-bench idiom).
+
+On this CPU container the absolute numbers are interpret-mode
+correctness-path timings, not TPU performance; the *trajectory* (ratios
+across widths, fused vs unfused, and run-over-run regressions) is what
+the gate protects.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Optional
+
+import numpy as np
+
+#: Table-5/Table-6 matmul shapes (name, (m, k, n)) -- the full problem
+#: sizes the un-clamped kernels now measure end to end.
+BENCH_SHAPES: tuple[tuple[str, tuple[int, int, int]], ...] = (
+    ("gemm", (400, 400, 400)),     # Table-5/6 GEMM (mk/gemm op)
+    ("gemv", (1, 4096, 512)),      # Table-6 GEMV
+    ("vgg_fc", (1, 512, 512)),     # VGG classifier fc0/fc1
+    ("vgg_fc_out", (1, 512, 10)),  # VGG classifier fc2 (ragged N)
+)
+#: weight widths: the paper's low-precision sweep + full INT16
+BENCH_WIDTHS: tuple[int, ...] = (1, 4, 8, 16)
+#: quick (CI smoke) subset: the committed acceptance widths
+QUICK_WIDTHS: tuple[int, ...] = (4, 8, 16)
+
+
+def _clock(fn, reps: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn())  # warmup / compile
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(samples)
+
+
+def run_pallas_bench(*, quick: bool = False, reps: Optional[int] = None,
+                     seed: int = 0, interpret: bool = True,
+                     shapes=None, widths=None) -> dict:
+    """Time every case; returns the BENCH_pallas.json payload dict."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    from repro.kernels import tiling as tl
+
+    if shapes is None:
+        shapes = BENCH_SHAPES
+    if reps is None:
+        reps = 2 if quick else 5
+    if widths is None:
+        widths = QUICK_WIDTHS if quick else BENCH_WIDTHS
+    rng = np.random.default_rng(seed)
+    cases = []
+    for shape_name, (m, k, n) in shapes:
+        x = jnp.asarray(rng.integers(-8, 8, (m, k), dtype=np.int32)
+                        ).astype(jnp.int8)
+        for bits in widths:
+            w = jnp.asarray(rng.integers(0, 1 << min(bits, 31),
+                                         (k, n)).astype(np.int32))
+            wp = w.astype(kops.bp_weight_dtype(bits))
+            wu = w.astype(jnp.uint32)
+
+            def bs_unfused(wu=wu, x=x, bits=bits):
+                planes = kops.pack_weights(wu, bits, interpret=interpret)
+                return kops.matmul_bs(x, planes, interpret=interpret)
+
+            paths = (
+                ("bp", tl.bp_tiling(m, k, n),
+                 lambda x=x, wp=wp: kops.matmul_bp(
+                     x, wp, interpret=interpret)),
+                ("bs_fused", tl.fused_tiling(m, k, n),
+                 lambda x=x, w=w, bits=bits: kops.matmul_bs_fused(
+                     x, w, bits, interpret=interpret)),
+                ("bs_unfused", tl.bs_tiling(m, k, n), bs_unfused),
+            )
+            for path, tiling, fn in paths:
+                cases.append({
+                    "name": f"{shape_name}/w{bits}/{path}",
+                    "shape": [m, k, n], "width": bits, "path": path,
+                    "padded": list(tiling.padded_dims),
+                    "us": _clock(fn, reps),
+                })
+    return {"reps": reps, "quick": quick, "interpret": interpret,
+            "seed": seed, "cases": cases}
+
+
+def check_pallas_regression(payload: dict, baseline_payload: dict,
+                            threshold: float = 0.5,
+                            floor_us: float = 2000.0
+                            ) -> tuple[bool, str]:
+    """CI gate: ``(ok, message)``; fails when any case's median exceeds
+    its committed baseline by more than ``threshold``.
+
+    ``floor_us`` clamps the baseline: sub-millisecond interpret-mode
+    medians double under shared-runner jitter without meaning anything,
+    so cases under ``floor_us * (1 + threshold)`` always pass and the
+    gate targets systematic multi-x regressions (a kernel falling off
+    the grid-tiled path, a fusion silently re-materializing planes).
+    Cases with no baseline entry (new shapes/widths) pass with a note.
+    """
+    base = {c["name"]: c for c in baseline_payload.get("cases", ())}
+    failures, checked, new = [], 0, 0
+    for c in payload.get("cases", ()):
+        b = base.get(c["name"])
+        if b is None:
+            new += 1
+            continue
+        checked += 1
+        ref = max(b["us"], floor_us)
+        if c["us"] > ref * (1.0 + threshold):
+            failures.append(f"{c['name']}: {c['us']:.0f}us vs baseline "
+                            f"{b['us']:.0f}us (x{c['us'] / ref:.2f}, "
+                            f"budget x{1 + threshold:.2f})")
+    msg = (f"{checked} case(s) gated, {new} new, "
+           f"{len(failures)} regression(s)")
+    if failures:
+        msg += " -- " + "; ".join(failures)
+    return not failures, msg

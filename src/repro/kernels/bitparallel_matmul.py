@@ -1,11 +1,22 @@
-"""Bit-parallel (word-level) int8 matmul Pallas kernel -- the BP layout.
+"""Bit-parallel (word-level) integer matmul Pallas kernel -- the BP layout.
 
-Words stay horizontal: one MXU pass over the full-width int8 operands with
-K-blocked accumulation in a VMEM scratch accumulator. 128-aligned tiles
-match the MXU systolic dimensions.
+Words stay horizontal: one MXU pass over the full-width integer operands
+with K-blocked accumulation in a VMEM scratch accumulator.  The kernel is
+grid-tiled over the *whole* problem: arbitrary (M, K, N) are padded only
+up to the hardware-minimum tile multiples (``kernels.tiling``), never
+clamped down to a representative tile, and the true result is sliced back
+out (zero padding is exact for integer contractions).
+
+Accumulation is int32 (``preferred_element_type``), not float32: un-clamped
+K reaches depths where f32's 24-bit mantissa silently rounds integer
+partial sums (K=4096 int8 products exceed 2^24), so exactness at full
+problem sizes requires the integer path.  Operands may be any integer
+dtype -- int8 activations against int8/int16/int32 words -- so full-width
+(>8-bit) BP passes measure honestly instead of wrapping through int8.
 
 Grid: (M/bm, N/bn, K/bk) with the K axis sequential ("arbitrary") so the
-accumulator scratch carries across K steps.
+accumulator scratch carries across K steps -- the same streaming-
+accumulation idiom as ``kernels/flash_attention.py``.
 """
 from __future__ import annotations
 
@@ -16,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import bp_tiling
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -23,35 +36,40 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jax.lax.dot(
-        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
-        precision=jax.lax.Precision.HIGHEST)
+        x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(jnp.int32)
+        o_ref[...] = acc_ref[...]
 
 
 def bitparallel_matmul(x: jax.Array, w: jax.Array, *,
                        block_m: int = 128, block_n: int = 128,
                        block_k: int = 128,
                        interpret: bool = True) -> jax.Array:
-    """x: int8 [M, K]; w: int8 [K, N] -> int32 [M, N]."""
+    """x: int [M, K]; w: int [K, N] -> int32 [M, N] (exact mod 2^32)."""
     M, K = x.shape
     K2, N = w.shape
-    assert K == K2
-    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0
-    k_steps = K // bk
-    return pl.pallas_call(
+    assert K == K2, (K, K2)
+    t = bp_tiling(M, K, N, block_m=block_m, block_n=block_n,
+                  block_k=block_k)
+    if (t.pm, t.pk) != (M, K):
+        x = jnp.pad(x, ((0, t.pm - M), (0, t.pk - K)))
+    if (t.pk, t.pn) != (K, N):
+        w = jnp.pad(w, ((0, t.pk - K), (0, t.pn - N)))
+    gm, gn, k_steps = t.grid
+    out = pl.pallas_call(
         functools.partial(_kernel, k_steps=k_steps),
-        grid=(M // bm, N // bn, k_steps),
+        grid=(gm, gn, k_steps),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((t.bm, t.bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((t.bk, t.bn), lambda i, j, k: (k, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        out_specs=pl.BlockSpec((t.bm, t.bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t.pm, t.pn), jnp.int32),
         # VMEM accumulator persisted across the sequential K axis
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((t.bm, t.bn), jnp.int32)],
         interpret=interpret,
     )(x, w)
+    return out[:M, :N] if (t.pm, t.pn) != (M, N) else out

@@ -1,7 +1,7 @@
 """Bit-serial (bitplane) matmul Pallas kernel -- the TPU-native BS layout.
 
 The paper's BS column ALU processes one bit-position of every element per
-cycle. The TPU analogue is *bit-slicing*: an unsigned `bits`-wide weight
+cycle.  The TPU analogue is *bit-slicing*: an unsigned `bits`-wide weight
 matrix is stored as `bits` 1-bit planes (32 K-rows packed per uint32 word),
 and y = x @ W is computed plane-by-plane:
 
@@ -9,11 +9,18 @@ and y = x @ W is computed plane-by-plane:
 
 Each plane's product is a binary-matrix contraction: the kernel unpacks the
 plane tile in VMEM (shift+mask -- the "sense amplifier read" of the slice)
-and feeds the MXU with a 0/1 operand. Low-precision weights cost
+and feeds the MXU with a 0/1 operand.  Low-precision weights cost
 proportionally fewer plane passes -- exactly the BS latency scaling
-(Table 2: N-bit -> N cycles), while dense int8 BP costs one full-width pass.
+(Table 2: N-bit -> N cycles), while dense full-width BP costs one pass.
 
-Grid: (M/bm, N/bn); K is kept resident per tile (weights stream plane-wise).
+Grid: (M/bm, N/bn, Kg/bkg) -- the whole problem, with K streamed in
+packed-group blocks along the sequential axis and partial sums carried in
+a VMEM int32 accumulator (flash-attention-style streaming; f32
+accumulation would round un-clamped K, see bitparallel_matmul).  Arbitrary
+(M, N, K) are padded to the hardware-minimum tile multiples only
+(``kernels.tiling.bs_tiling``) and the true result sliced back out.
+Results are exact integers mod 2^32 (int32 wraparound arithmetic agrees
+with the unbounded-integer reference mod 2^32 at any width <= 32).
 """
 from __future__ import annotations
 
@@ -22,42 +29,68 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiling import bs_tiling
 
 
-def _kernel(x_ref, planes_ref, o_ref, *, bits: int, K: int):
-    # x_ref: [bm, K] int8 ; planes_ref: [bits, K//32, bn] uint32
-    # o_ref: [bm, bn] int32
-    x = x_ref[...].astype(jnp.float32)  # MXU operand
-    acc = jnp.zeros(o_ref.shape, jnp.float32)
+def _kernel(x_ref, planes_ref, o_ref, acc_ref, *, bits: int, bk: int,
+            k_steps: int):
+    # x_ref: [bm, bk] int ; planes_ref: [bits, bk//32, bn] uint32
+    # o_ref / acc_ref: [bm, bn] int32
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)  # MXU operand
     shifts = jnp.arange(32, dtype=jnp.uint32)
+    acc = acc_ref[...]
     for b in range(bits):  # bit-serial plane loop
-        packed = planes_ref[b]  # [K//32, bn] uint32
+        packed = planes_ref[b]  # [bk//32, bn] uint32
         bits_kn = ((packed[:, None, :] >> shifts[None, :, None])
-                   & jnp.uint32(1))  # [K//32, 32, bn]
-        plane = bits_kn.reshape(K, -1).astype(jnp.float32)
-        acc = acc + jnp.float32(1 << b) * jax.lax.dot(
-            x, plane, precision=jax.lax.Precision.HIGHEST)
-    o_ref[...] = acc.astype(jnp.int32)
+                   & jnp.uint32(1))  # [bk//32, 32, bn]
+        plane = bits_kn.reshape(bk, -1).astype(jnp.int32)
+        acc = acc + (jax.lax.dot(x, plane,
+                                 preferred_element_type=jnp.int32) << b)
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
 
 
 def bitserial_matmul(x: jax.Array, planes: jax.Array, *,
                      block_m: int = 128, block_n: int = 128,
+                     block_k: int = 512,
                      interpret: bool = True) -> jax.Array:
-    """x: int8 [M, K]; planes: uint32 [bits, K//32, N] -> int32 [M, N]."""
+    """x: int [M, K]; planes: uint32 [bits, K//32, N] -> int32 [M, N]."""
     M, K = x.shape
     bits, Kg, N = planes.shape
-    assert Kg * 32 == K, (K, Kg)
-    bm, bn = min(block_m, M), min(block_n, N)
-    assert M % bm == 0 and N % bn == 0
-    grid = (M // bm, N // bn)
-    return pl.pallas_call(
-        functools.partial(_kernel, bits=bits, K=K),
-        grid=grid,
+    # bitpack zero-pads ragged K into whole 32-row groups; those zero plane
+    # rows kill whatever x carries there, so padding x up is exact too.
+    assert Kg * 32 >= K, (K, Kg)
+    K = Kg * 32
+    t = bs_tiling(M, K, N, block_m=block_m, block_n=block_n,
+                  block_k=block_k)
+    if (t.pm, t.pk) != x.shape:
+        x = jnp.pad(x, ((0, t.pm - M), (0, t.pk - x.shape[1])))
+    pkg = t.pk // 32
+    if (pkg, t.pn) != (Kg, N):
+        # zero plane groups / columns contribute nothing to the dot
+        planes = jnp.pad(planes, ((0, 0), (0, pkg - Kg), (0, t.pn - N)))
+    gm, gn, k_steps = t.grid
+    bkg = t.bk // 32
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, bk=t.bk, k_steps=k_steps),
+        grid=(gm, gn, k_steps),
         in_specs=[
-            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
-            pl.BlockSpec((bits, Kg, bn), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((t.bm, t.bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bits, bkg, t.bn), lambda i, j, k: (0, k, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        out_specs=pl.BlockSpec((t.bm, t.bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t.pm, t.pn), jnp.int32),
+        # VMEM accumulator persisted across the sequential K axis
+        scratch_shapes=[pltpu.VMEM((t.bm, t.bn), jnp.int32)],
         interpret=interpret,
     )(x, planes)
+    return out[:M, :N] if (t.pm, t.pn) != (M, N) else out

@@ -14,7 +14,19 @@ from repro.core.taxonomy import Recommendation, classify
 from repro.kernels.bitpack import bitpack, bitunpack
 from repro.kernels.bitparallel_matmul import bitparallel_matmul
 from repro.kernels.bitserial_matmul import bitserial_matmul
+from repro.kernels.fused_bitserial_matmul import fused_bitserial_matmul
 from repro.workloads.ir import Op
+
+
+def bp_weight_dtype(weight_bits: int):
+    """Smallest signed dtype that holds unsigned ``weight_bits`` words
+    losslessly for the BP (word) kernel.  The pre-PR-9 path cast every
+    weight to int8, silently wrapping widths >= 8."""
+    if weight_bits <= 7:
+        return jnp.int8
+    if weight_bits <= 15:
+        return jnp.int16
+    return jnp.int32
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
@@ -29,19 +41,39 @@ def unpack_weights(planes: jax.Array, k: int | None = None):
     return bitunpack(planes, k)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def matmul_bs(x: jax.Array, planes: jax.Array, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=(
+    "interpret", "block_m", "block_n", "block_k"))
+def matmul_bs(x: jax.Array, planes: jax.Array, interpret: bool = True,
+              block_m: int = 128, block_n: int = 128, block_k: int = 512):
     # bitpack zero-pads K to a multiple of 32; mirror the padding on the
     # activation side (zero rows contribute nothing to the contraction)
     k_planes = planes.shape[1] * 32
     if x.shape[1] != k_planes:
         x = jnp.pad(x, ((0, 0), (0, k_planes - x.shape[1])))
-    return bitserial_matmul(x, planes, interpret=interpret)
+    return bitserial_matmul(x, planes, interpret=interpret,
+                            block_m=block_m, block_n=block_n,
+                            block_k=max(block_k, 256))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def matmul_bp(x: jax.Array, w: jax.Array, interpret: bool = True):
-    return bitparallel_matmul(x, w, interpret=interpret)
+@functools.partial(jax.jit, static_argnames=(
+    "interpret", "block_m", "block_n", "block_k"))
+def matmul_bp(x: jax.Array, w: jax.Array, interpret: bool = True,
+              block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    return bitparallel_matmul(x, w, interpret=interpret, block_m=block_m,
+                              block_n=block_n, block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "interpret", "block_m", "block_n", "block_k"))
+def matmul_bs_fused(x: jax.Array, w: jax.Array, bits: int,
+                    interpret: bool = True, block_m: int = 128,
+                    block_n: int = 128, block_k: int = 128):
+    """One-kernel BS path: packs plane slices in VMEM and accumulates the
+    plane loop without materializing the ``[bits, K/32, N]`` artifact.
+    Bit-exact with ``pack_weights`` -> ``matmul_bs``."""
+    return fused_bitserial_matmul(x, w, bits, interpret=interpret,
+                                  block_m=block_m, block_n=block_n,
+                                  block_k=block_k)
 
 
 def choose_layout(*, weight_bits: int, m: int, n: int, k: int,
@@ -66,12 +98,14 @@ def choose_layout(*, weight_bits: int, m: int, n: int, k: int,
 
 def planned_matmul(x: jax.Array, w: jax.Array, *, weight_bits: int,
                    plan=None, op_name: str | None = None,
-                   interpret: bool = True):
+                   fuse_pack: bool = False, interpret: bool = True):
     """Dispatch x @ w to the BS (bitplane) or BP (word) kernel per a
     compiled :class:`repro.plan.ir.LayoutPlan` -- the same plan the cost
     model priced.  ``plan.layout_for(op_name)`` picks the kernel; with no
     plan, fall back to the Table-8 advisor (:func:`choose_layout`).
-    w: unsigned ints < 2^weight_bits, [K, N].  Returns (y, Layout)."""
+    ``fuse_pack=True`` folds the BP->BS repack into the BS kernel itself
+    (no materialized plane tensor).  w: unsigned ints < 2^weight_bits,
+    [K, N].  Returns (y, Layout)."""
     m, k = x.shape
     n = w.shape[1]
     if plan is not None:
@@ -80,10 +114,14 @@ def planned_matmul(x: jax.Array, w: jax.Array, *, weight_bits: int,
         rec = choose_layout(weight_bits=weight_bits, m=m, n=n, k=k)
         layout = Layout.BS if rec == Recommendation.BS else Layout.BP
     if layout is Layout.BS:
+        if fuse_pack:
+            return (matmul_bs_fused(x, w, weight_bits, interpret=interpret),
+                    Layout.BS)
         planes = pack_weights(w.astype(jnp.uint32), weight_bits,
                               interpret=interpret)
         return matmul_bs(x, planes, interpret=interpret), Layout.BS
-    return matmul_bp(x, w.astype(jnp.int8), interpret=interpret), Layout.BP
+    return (matmul_bp(x, w.astype(bp_weight_dtype(weight_bits)),
+                      interpret=interpret), Layout.BP)
 
 
 def layout_aware_matmul(x: jax.Array, w: jax.Array, *, weight_bits: int,

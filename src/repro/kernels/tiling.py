@@ -1,0 +1,120 @@
+"""Grid-tiling arithmetic shared by the matmul kernels and PallasBackend.
+
+One source of truth for how a full (M, K, N) problem maps onto a Pallas
+grid: block sizes are clamped *down* to the problem (never the problem
+down to a tile -- the pre-PR-9 ``max(32, min(tile, dim))`` clamp is gone),
+and every dimension is padded **only up to the kernel's hardware minimum
+tile multiple** (TPU tiling constraints: the last dim is always a lane
+multiple of 128; the second-to-last dim a dtype-dependent sublane
+multiple).  Zero padding is exact for integer matmuls -- padded rows and
+columns contribute nothing -- so the kernels compute the whole op and
+slice the true result back out.
+
+``OpReport`` rows record both the true and the padded dims from these
+tilings, so measured wall-clocks never misstate what was actually run
+(ISSUE 9 satellite: reports must not inflate small ops silently).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+#: TPU lane count: the last dim of any tile is a multiple of this.
+LANE = 128
+#: Min sublane (second-to-last dim) multiples by operand byte width.
+SUBLANE = {1: 32, 2: 16, 4: 8}
+
+
+def ceil_to(x: int, m: int) -> int:
+    """Round ``x`` up to the next multiple of ``m`` (min one ``m``)."""
+    return max(m, ((x + m - 1) // m) * m)
+
+
+def block_dim(dim: int, want: int, minimum: int) -> int:
+    """Pick a grid block edge for a dimension of true size ``dim``.
+
+    The block is a multiple of ``minimum`` (the hardware tile multiple),
+    at most ``want`` rounded down to that multiple, and never larger than
+    the padded problem itself -- so small problems run as a single
+    hardware-minimum tile instead of being inflated to ``want``.
+    """
+    want = max(minimum, (want // minimum) * minimum)
+    return min(want, ceil_to(dim, minimum))
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulTiling:
+    """A full (M, K, N) problem mapped onto a Pallas grid."""
+
+    m: int
+    k: int
+    n: int
+    bm: int
+    bk: int
+    bn: int
+
+    @property
+    def pm(self) -> int:
+        return ceil_to(self.m, self.bm)
+
+    @property
+    def pk(self) -> int:
+        return ceil_to(self.k, self.bk)
+
+    @property
+    def pn(self) -> int:
+        return ceil_to(self.n, self.bn)
+
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        """(M tiles, N tiles, K steps) -- K is the sequential axis."""
+        return (self.pm // self.bm, self.pn // self.bn, self.pk // self.bk)
+
+    @property
+    def padded_macs(self) -> int:
+        """MACs the padded problem actually performs (one plane pass)."""
+        return self.pm * self.pk * self.pn
+
+    @property
+    def dims(self) -> tuple[int, int, int]:
+        return (self.m, self.k, self.n)
+
+    @property
+    def padded_dims(self) -> tuple[int, int, int]:
+        return (self.pm, self.pk, self.pn)
+
+
+#: Hardware minimum (m, k, n) multiples per kernel family.  BP and the
+#: fused BS kernel stream int8 activations [bm, bk] (sublane 32, lane
+#: 128); the unfused BS kernel's packed-plane block [bits, bkg, bn] is
+#: uint32 (sublane 8 *packed groups* of 32 K-rows each => K multiple 256).
+BP_MIN = (SUBLANE[1], LANE, LANE)           # (32, 128, 128)
+BS_MIN = (SUBLANE[1], 32 * SUBLANE[4], LANE)  # (32, 256, 128)
+FUSED_MIN = BP_MIN                           # word weights, int8 x
+
+
+def bp_tiling(m: int, k: int, n: int, *, block_m: int = 128,
+              block_n: int = 128, block_k: int = 128) -> MatmulTiling:
+    """Tiling for the bit-parallel (word) matmul kernel."""
+    mm, mk, mn = BP_MIN
+    return MatmulTiling(m, k, n, block_dim(m, block_m, mm),
+                        block_dim(k, block_k, mk), block_dim(n, block_n, mn))
+
+
+def bs_tiling(m: int, k: int, n: int, *, block_m: int = 128,
+              block_n: int = 128, block_k: int = 512) -> MatmulTiling:
+    """Tiling for the unfused bit-serial (packed bitplane) matmul kernel.
+
+    ``k`` here is the *word* contraction depth; the kernel streams K in
+    blocks of ``bk`` words = ``bk/32`` packed uint32 groups.
+    """
+    mm, mk, mn = BS_MIN
+    return MatmulTiling(m, k, n, block_dim(m, block_m, mm),
+                        block_dim(k, block_k, mk), block_dim(n, block_n, mn))
+
+
+def fused_tiling(m: int, k: int, n: int, *, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 128) -> MatmulTiling:
+    """Tiling for the fused bitpack-matmul kernel (word weights in VMEM)."""
+    mm, mk, mn = FUSED_MIN
+    return MatmulTiling(m, k, n, block_dim(m, block_m, mm),
+                        block_dim(k, block_k, mk), block_dim(n, block_n, mn))

@@ -12,7 +12,12 @@ Public surface (see README.md in this directory and DESIGN.md Sec. 10)::
     p.total_cycles, p.op_schedule(), p.feasible
     replay_plan(p, get_workload("aes"))        # predicted vs executed
 
-CLI: ``python -m repro plan <workload> [--geometry RxCxA] [--execute]``.
+    from repro.plan import lower_plan_pallas, run_schedule
+    sched = lower_plan_pallas(p, get_workload("aes"))   # measured twin
+    run_schedule(sched, synth_inputs(sched))            # Pallas sequence
+
+CLI: ``python -m repro plan <workload> [--geometry RxCxA] [--execute]
+[--pallas]``.
 """
 from repro.plan.ir import (  # noqa: F401
     LayoutPlan,
@@ -24,6 +29,15 @@ from repro.plan.lower import (  # noqa: F401
     replay_matches,
     replay_plan,
     step_program,
+)
+from repro.plan.pallas import (  # noqa: F401
+    PallasSchedule,
+    PallasStep,
+    lower_plan_pallas,
+    reference_results,
+    run_schedule,
+    synth_inputs,
+    time_schedule,
 )
 from repro.plan.scheduler import (  # noqa: F401
     PlanError,

@@ -1,0 +1,285 @@
+"""Lower a :class:`LayoutPlan` to a measured Pallas kernel schedule.
+
+``plan.lower`` replays a plan on the simulated CSA (micro-op programs);
+this module is the *wall-clock* twin (DESIGN.md Sec. 14): the plan's
+op-level schedule lowers to a sequence of Pallas kernel launches --
+BP steps to the word matmul kernel, BS steps to the bitplane kernel,
+layout boundaries to weight *repacks* (``bp2bs`` = bitpack, ``bs2bp`` =
+bitunpack) -- so a hybrid plan runs as a measured kernel sequence, not
+only as simulator programs.
+
+The lowering contract:
+
+* **Activations always flow in word (BP) form.**  The layout decision
+  applies to the *stationary* weights -- exactly the paper's framing,
+  where the array-resident operand carries the layout and the streamed
+  operand is broadcast bit-parallel on the bitlines.
+* **A layout boundary is a weight repack.**  When the plan's op-level
+  layout flips BP->BS the incoming word weights are bitpacked (the
+  transpose unit's read(M)+core+write(N) pass); BS->BP is a bitunpack.
+  With ``fuse_pack=True`` (default) a ``bp2bs`` repack feeding a BS
+  matmul is *folded into* the fused kernel -- no plane tensor is ever
+  materialized, mirroring how a transpose unit feeds the array directly.
+* **Only matmul/conv steps are measured.**  Conv lowers to the same
+  im2col GEMV the ``ExecutorBackend`` prices (``(m, k, n) = (op.n,
+  op.k, 1)``).  ``kernel``/``movement``/``compute`` ops have no Pallas
+  kernel; they appear in the schedule as modelled-only rows so the
+  sequence never silently drops plan steps.
+* **Results are exact** (int32 wraparound semantics, see
+  ``kernels/bitparallel_matmul.py``): ``run_schedule`` output is
+  bit-identical to the unfused pack->matmul path and to the pim
+  micro-op executor's MAC decomposition of the same op.
+
+Ops whose *padded* MAC volume (times plane passes for BS) exceeds
+``max_macs`` are lowered as modelled-only too -- an honest
+"too large to time here" note, never a silently clamped measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cost_model import Layout
+from repro.plan.ir import LayoutPlan
+
+#: kinds that lower to a Pallas matmul launch
+_MEASURABLE = ("matmul", "conv")
+#: widest weight the BS plane loop supports (uint32 plane words)
+MAX_BS_WIDTH = 32
+#: default padded-MAC budget per kernel launch (interpret-mode throughput
+#: is ~10^8 MAC/s; 2^31 keeps a single launch under ~30 s)
+DEFAULT_MAX_MACS = 2 ** 31
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasStep:
+    """One op of the lowered schedule: a kernel launch or a modelled row."""
+
+    op: str              #: workload op name
+    kind: str            #: IR op kind
+    layout: Layout       #: plan-assigned op-level layout
+    width: int           #: weight precision (plane passes for BS)
+    kernel: Optional[str]    #: Pallas kernel name; None => modelled-only
+    repack: Optional[str]    #: ``bp2bs`` | ``bs2bp`` at this boundary
+    dims: Optional[tuple[int, int, int]] = None         #: true (m, k, n)
+    padded_dims: Optional[tuple[int, int, int]] = None  #: as padded/run
+    note: str = ""
+
+    @property
+    def measured(self) -> bool:
+        return self.kernel is not None
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["layout"] = self.layout.value
+        d["measured"] = self.measured
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasSchedule:
+    """A plan lowered to an ordered Pallas kernel sequence."""
+
+    workload: str
+    steps: tuple[PallasStep, ...]
+    fuse_pack: bool
+
+    @property
+    def measured_steps(self) -> tuple[PallasStep, ...]:
+        return tuple(s for s in self.steps if s.measured)
+
+    @property
+    def n_repacks(self) -> int:
+        return sum(1 for s in self.steps if s.repack)
+
+    def to_dict(self) -> dict:
+        return {"workload": self.workload, "fuse_pack": self.fuse_pack,
+                "n_repacks": self.n_repacks,
+                "steps": [s.to_dict() for s in self.steps]}
+
+
+def _op_dims(op) -> tuple[int, int, int]:
+    """(m, k, n) of the matmul a measurable op lowers to.
+
+    Conv uses the ExecutorBackend lowering: ``op.n`` im2col output
+    elements, each a ``op.k``-deep (taps x C_in) MAC chain -- a GEMV
+    ``(op.n, op.k) @ (op.k, 1)``.  The pre-PR-9 ``(op.n, op.k, op.n)``
+    mapping squared the output count.
+    """
+    if op.kind == "matmul":
+        return (op.m, op.k, op.n)
+    return (op.n, op.k, 1)
+
+
+def _tiling(layout: Layout, fused: bool, m: int, k: int, n: int):
+    from repro.kernels import tiling as tl
+
+    if layout is Layout.BP:
+        return tl.bp_tiling(m, k, n)
+    return tl.fused_tiling(m, k, n) if fused else tl.bs_tiling(m, k, n)
+
+
+def lower_plan_pallas(plan: LayoutPlan, workload, *,
+                      fuse_pack: bool = True,
+                      max_macs: int = DEFAULT_MAX_MACS) -> PallasSchedule:
+    """Lower ``plan``'s op-level schedule to a Pallas kernel sequence."""
+    current = plan.initial_layout
+    steps: list[PallasStep] = []
+    for op in workload.ops:
+        layout = plan.layout_for(op.name)
+        repack = None
+        if current is not None and layout is not current:
+            repack = "bp2bs" if layout is Layout.BS else "bs2bp"
+        current = layout
+        if op.kind not in _MEASURABLE:
+            steps.append(PallasStep(
+                op=op.name, kind=op.kind, layout=layout, width=op.width,
+                kernel=None, repack=repack,
+                note="modelled only: no Pallas lowering for "
+                     f"{op.kind!r} ops (DESIGN.md Sec. 14)"))
+            continue
+        m, k, n = _op_dims(op)
+        if layout is Layout.BS and op.width > MAX_BS_WIDTH:
+            steps.append(PallasStep(
+                op=op.name, kind=op.kind, layout=layout, width=op.width,
+                kernel=None, repack=repack, dims=(m, k, n),
+                note=f"unsupported: width {op.width} > {MAX_BS_WIDTH} "
+                     "plane passes (uint32 plane words)"))
+            continue
+        fused = fuse_pack and layout is Layout.BS and repack == "bp2bs"
+        t = _tiling(layout, fused, m, k, n)
+        planes = op.width if layout is Layout.BS else 1
+        if t.padded_macs * planes > max_macs:
+            steps.append(PallasStep(
+                op=op.name, kind=op.kind, layout=layout, width=op.width,
+                kernel=None, repack=repack, dims=(m, k, n),
+                padded_dims=t.padded_dims,
+                note=f"over budget: {t.padded_macs * planes} padded MACs "
+                     f"> max_macs={max_macs} -- not timed"))
+            continue
+        if layout is Layout.BP:
+            kernel = "bitparallel_matmul"
+        elif fused:
+            kernel = "fused_bitserial_matmul"
+        else:
+            kernel = "bitserial_matmul"
+        steps.append(PallasStep(
+            op=op.name, kind=op.kind, layout=layout, width=op.width,
+            kernel=kernel, repack=repack, dims=(m, k, n),
+            padded_dims=t.padded_dims,
+            note="repack folded into fused kernel" if fused else ""))
+    return PallasSchedule(workload=workload.name, steps=tuple(steps),
+                          fuse_pack=fuse_pack)
+
+
+def synth_inputs(schedule: PallasSchedule, seed: int = 0) -> dict:
+    """Random (x, w) operand pairs for every measured step.
+
+    x: int8 activations; w: unsigned ``width``-bit words (int32 storage)
+    -- the canonical word form both kernels consume.
+    """
+    rng = np.random.default_rng(seed)
+    out = {}
+    for s in schedule.measured_steps:
+        m, k, n = s.dims
+        hi = 1 << min(s.width, 31)
+        out[s.op] = (
+            rng.integers(-128, 128, (m, k), dtype=np.int8),
+            rng.integers(0, hi, (k, n)).astype(np.int32),
+        )
+    return out
+
+
+def run_schedule(schedule: PallasSchedule, inputs: dict, *,
+                 interpret: bool = True) -> dict:
+    """Execute every measured step; return {op: int32 [m, n] result}.
+
+    ``inputs`` maps op name -> (x, w) with w in word form (see
+    :func:`synth_inputs`).  BS steps pack (or fuse the pack of) their
+    weights per the schedule; BP steps run the word kernel losslessly.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    results = {}
+    for s in schedule.measured_steps:
+        x, w = inputs[s.op]
+        x = jnp.asarray(x)
+        w = jnp.asarray(w)
+        if s.layout is Layout.BP:
+            y = kops.matmul_bp(x, w.astype(kops.bp_weight_dtype(s.width)),
+                               interpret=interpret)
+        elif s.kernel == "fused_bitserial_matmul":
+            y = kops.matmul_bs_fused(x, w, s.width, interpret=interpret)
+        else:
+            planes = kops.pack_weights(w.astype(jnp.uint32), s.width,
+                                       interpret=interpret)
+            y = kops.matmul_bs(x, planes, interpret=interpret)
+        results[s.op] = np.asarray(y)
+    return results
+
+
+def reference_results(schedule: PallasSchedule, inputs: dict) -> dict:
+    """Plain-integer references (int32 wraparound) for every measured step."""
+    out = {}
+    for s in schedule.measured_steps:
+        x, w = inputs[s.op]
+        out[s.op] = (x.astype(np.int64) @ w.astype(np.int64)).astype(
+            np.int32)
+    return out
+
+
+def time_schedule(schedule: PallasSchedule, inputs: dict, *,
+                  reps: int = 5, interpret: bool = True) -> list[dict]:
+    """Median-of-``reps`` wall-clock per measured step (plus modelled rows).
+
+    Returns one record per schedule step: ``{op, kind, layout, kernel,
+    repack, dims, padded_dims, width, us, note}`` -- ``us`` is None for
+    modelled-only rows.  One warmup launch per step amortizes tracing.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    rows = []
+    for s in schedule.steps:
+        rec = {"op": s.op, "kind": s.kind, "layout": s.layout.value,
+               "kernel": s.kernel, "repack": s.repack, "dims": s.dims,
+               "padded_dims": s.padded_dims, "width": s.width,
+               "us": None, "note": s.note}
+        if s.measured:
+            x, w = inputs[s.op]
+            x = jnp.asarray(x)
+            w = jnp.asarray(w)
+
+            if s.layout is Layout.BP:
+                wt = w.astype(kops.bp_weight_dtype(s.width))
+
+                def fn(x=x, wt=wt):
+                    return kops.matmul_bp(x, wt, interpret=interpret)
+            elif s.kernel == "fused_bitserial_matmul":
+                def fn(x=x, w=w, bits=s.width):
+                    return kops.matmul_bs_fused(x, w, bits,
+                                                interpret=interpret)
+            else:
+                # unfused: the pack pass is part of the measured path --
+                # that is exactly the artifact fusion removes
+                def fn(x=x, w=w, bits=s.width):
+                    planes = kops.pack_weights(w.astype(jnp.uint32), bits,
+                                               interpret=interpret)
+                    return kops.matmul_bs(x, planes, interpret=interpret)
+            jax.block_until_ready(fn())  # warmup: trace + compile
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                ts.append((time.perf_counter() - t0) * 1e6)
+            rec["us"] = statistics.median(ts)
+        rows.append(rec)
+    return rows

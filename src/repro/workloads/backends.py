@@ -20,9 +20,11 @@ Every backend answers the same question -- "what does this workload cost?"
   matmul/conv MACs decompose into ``multu`` + ``vector_add`` programs.
   Documented executed-vs-analytic calibration deltas (DESIGN.md Sec. 8)
   surface in ``OpReport.note`` and ``Report.notes``.
-* :class:`PallasBackend`    -- dispatches the ``kernels.ops`` Pallas
-  matmuls on a representative tile and measures wall-clock (on CPU these
-  are interpret-mode correctness-path timings, as in benchmarks/).
+* :class:`PallasBackend`    -- dispatches the grid-tiled ``kernels.ops``
+  Pallas matmuls over the *whole op* (padded only to hardware-minimum
+  tiles, true widths, honest ``supported=False`` for over-budget or
+  over-width ops) and measures wall-clock (on CPU these are
+  interpret-mode correctness-path timings, as in benchmarks/).
 
 ``Report.summary`` keys shared by the cycle backends: ``bp_cycles``,
 ``bs_cycles`` (static totals over supported ops) plus backend-specific
@@ -62,12 +64,20 @@ class OpReport:
     bs_us: Optional[float] = None
     #: reserved -- the paper publishes no energy model (DESIGN.md Sec. 5)
     energy_nj: Optional[float] = None
+    #: true (m, k, n) the op lowers to, and the dims actually run after
+    #: hardware-minimum tile padding (Pallas backend; additive in schema
+    #: v1 -- measurements must never misstate what was run)
+    dims: Optional[tuple[int, int, int]] = None
+    padded_dims: Optional[tuple[int, int, int]] = None
     note: str = ""
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         if d["breakdown"] is not None:
             d["breakdown"] = {k: list(v) for k, v in d["breakdown"].items()}
+        for key in ("dims", "padded_dims"):
+            if d[key] is not None:
+                d[key] = list(d[key])
         return d
 
     @classmethod
@@ -76,6 +86,9 @@ class OpReport:
         if d.get("breakdown"):
             d["breakdown"] = {k: tuple(v)
                               for k, v in d["breakdown"].items()}
+        for key in ("dims", "padded_dims"):
+            if d.get(key) is not None:
+                d[key] = tuple(d[key])
         return cls(**d)
 
 
@@ -408,33 +421,66 @@ class ExecutorBackend(_SequentialEstimateMany):
 # Pallas (measured wall-clock of the TPU-analogue kernels)
 # ---------------------------------------------------------------------------
 
+#: widest BS weight the bitplane kernels support (uint32 plane words)
+PALLAS_MAX_BS_WIDTH = 32
+#: default per-launch padded-MAC budget (x plane passes for BS):
+#: interpret-mode throughput is ~10^8 MAC/s, so 2^31 bounds one launch
+#: to tens of seconds instead of silently clamping the problem
+PALLAS_MAX_MACS = 2 ** 31
+
+
 class PallasBackend(_SequentialEstimateMany):
-    """Dispatch ``kernels.ops`` matmuls on a representative tile per
-    matmul/conv op and measure wall-clock for both layouts (BP int8
-    kernel vs BS bitplane kernel at the op's weight precision, capped at
-    8 plane passes).  Dims are clamped to ``tile`` to keep interpret-mode
-    CPU runs bounded; the measured quantity is the per-tile latency, not
-    the full op.  Timings are the median of 5 post-warmup reps with
-    ``block_until_ready`` (never a single cold wall-clock sample)."""
+    """Measure wall-clock of the grid-tiled Pallas kernels over the
+    *whole op* in both layouts: the BP word kernel vs the BS bitplane
+    kernel at the op's **true** weight precision (one plane pass per
+    bit -- never capped).  Dims are padded only up to each kernel's
+    hardware-minimum tile multiples (``kernels.tiling``); both the true
+    and the padded dims land in the ``OpReport`` so a report can never
+    misstate what was run.  Ops whose padded MAC volume exceeds
+    ``max_macs`` -- or whose width exceeds the kernels' 32-plane limit --
+    report ``supported=False`` with an honest note instead of a clamped
+    or understated number.  Timings are the median of ``reps``
+    post-warmup calls with ``block_until_ready`` (never a single cold
+    wall-clock sample).  ``fused=True`` (default) times the BS side as
+    the one-kernel fused bitpack-matmul; ``fused=False`` times the
+    unfused pack->matmul pipeline, pack pass included."""
 
     name = "pallas"
 
-    def __init__(self, tile: int = 64, interpret: bool = True):
+    def __init__(self, tile: int = 128, interpret: bool = True,
+                 reps: int = 5, max_macs: int = PALLAS_MAX_MACS,
+                 fused: bool = True):
         self.tile = tile
         self.interpret = interpret
+        self.reps = reps
+        self.max_macs = max_macs
+        self.fused = fused
 
     def supports(self, workload: Workload) -> bool:
         return any(op.kind in ("matmul", "conv") for op in workload.ops)
 
     def _dims(self, op: Op) -> tuple[int, int, int]:
-        t = self.tile
+        """True (m, k, n) of the matmul the op lowers to -- un-clamped.
+
+        Conv follows the same lowering ``ExecutorBackend`` prices:
+        ``op.n`` im2col output elements, each a ``op.k``-deep MAC chain,
+        i.e. a GEMV ``(op.n, op.k) @ (op.k, 1)``.
+        """
         if op.kind == "conv":
-            m, k, n = op.n, op.k, op.n
-        else:
-            m, k, n = op.m, op.k, op.n
-        clamp = lambda d: max(32, min(t, d))
-        # bitpack zero-pads K to a multiple of 32 itself; no rounding here
-        return clamp(m), clamp(k), clamp(n)
+            return op.n, op.k, 1
+        return op.m, op.k, op.n
+
+    def _tilings(self, m: int, k: int, n: int):
+        """(BP tiling, BS tiling) at this backend's block-size hint."""
+        from repro.kernels import tiling as tl
+
+        t = self.tile
+        bp = tl.bp_tiling(m, k, n, block_m=t, block_n=t, block_k=t)
+        bs = (tl.fused_tiling(m, k, n, block_m=t, block_n=t, block_k=t)
+              if self.fused else
+              tl.bs_tiling(m, k, n, block_m=t, block_n=t,
+                           block_k=max(t, 256)))
+        return bp, bs
 
     def estimate(self, workload: Workload,
                  sys: SystemParams = PAPER_SYSTEM) -> Report:
@@ -453,17 +499,18 @@ class PallasBackend(_SequentialEstimateMany):
         tot_bp = tot_bs = 0.0
         measured = 0
 
-        def clock(fn, reps: int = 5):
+        def clock(fn):
             """Median of `reps` timed calls after a compile/warmup call;
             `block_until_ready` keeps async dispatch out of the sample."""
             jax.block_until_ready(fn())  # warmup / compile
             samples = []
-            for _ in range(reps):
+            for _ in range(self.reps):
                 t0 = time.perf_counter()
                 jax.block_until_ready(fn())
                 samples.append((time.perf_counter() - t0) * 1e6)
             return statistics.median(samples)
 
+        bk = dict(block_m=self.tile, block_n=self.tile, block_k=self.tile)
         for op in workload.ops:
             if op.kind not in ("matmul", "conv"):
                 rows.append(OpReport(op=op.name, kind=op.kind,
@@ -471,21 +518,53 @@ class PallasBackend(_SequentialEstimateMany):
                                      note="no Pallas kernel for this op"))
                 continue
             m, k, n = self._dims(op)
-            bits = min(max(1, op.width), 8)
+            bits = max(1, op.width)
+            if bits > PALLAS_MAX_BS_WIDTH:
+                rows.append(OpReport(
+                    op=op.name, kind=op.kind, supported=False,
+                    dims=(m, k, n),
+                    note=f"unsupported: width {bits} > "
+                         f"{PALLAS_MAX_BS_WIDTH} plane passes "
+                         "(uint32 plane words) -- not measured"))
+                continue
+            bp_t, bs_t = self._tilings(m, k, n)
+            work = max(bp_t.padded_macs, bs_t.padded_macs * bits)
+            if work > self.max_macs:
+                rows.append(OpReport(
+                    op=op.name, kind=op.kind, supported=False,
+                    dims=(m, k, n), padded_dims=bp_t.padded_dims,
+                    note=f"over budget: {work} padded MACs (BS work = "
+                         f"{bits} planes) > max_macs={self.max_macs} "
+                         "-- not measured"))
+                continue
             x = jnp.asarray(rng.integers(-8, 8, (m, k), dtype=np.int32)
                             ).astype(jnp.int8)
-            w = jnp.asarray(rng.integers(0, 2 ** bits, (k, n),
-                                         dtype=np.uint32))
-            planes = kops.pack_weights(w, bits, interpret=self.interpret)
+            w = jnp.asarray(rng.integers(0, 1 << min(bits, 31),
+                                         (k, n)).astype(np.int32))
+            wp = w.astype(kops.bp_weight_dtype(bits))
             bp_us = clock(lambda: kops.matmul_bp(
-                x, w.astype(jnp.int8), interpret=self.interpret))
-            bs_us = clock(lambda: kops.matmul_bs(
-                x, planes, interpret=self.interpret))
-            rec = kops.choose_layout(weight_bits=bits, m=op.m or m,
-                                     n=op.n or n, k=op.k or k)
+                x, wp, interpret=self.interpret, **bk))
+            if self.fused:
+                bs_us = clock(lambda: kops.matmul_bs_fused(
+                    x, w, bits, interpret=self.interpret, **bk))
+                bs_note = "fused"
+            else:
+                # unfused: the pack pass is part of the measured BS path
+                def bs_fn():
+                    planes = kops.pack_weights(w.astype(jnp.uint32), bits,
+                                               interpret=self.interpret)
+                    return kops.matmul_bs(x, planes,
+                                          interpret=self.interpret)
+                bs_us = clock(bs_fn)
+                bs_note = "unfused (pack on path)"
+            rec = kops.choose_layout(weight_bits=bits, m=m, n=n, k=k)
             rows.append(OpReport(
                 op=op.name, kind=op.kind, bp_us=bp_us, bs_us=bs_us,
-                note=f"tile={m}x{k}x{n}@{bits}b; choose_layout={rec.value}"))
+                dims=(m, k, n), padded_dims=bp_t.padded_dims,
+                note=f"{m}x{k}x{n}@{bits}b "
+                     f"padded_bp={'x'.join(map(str, bp_t.padded_dims))} "
+                     f"padded_bs={'x'.join(map(str, bs_t.padded_dims))} "
+                     f"bs={bs_note}; choose_layout={rec.value}"))
             tot_bp += bp_us
             tot_bs += bs_us
             measured += 1
@@ -494,8 +573,9 @@ class PallasBackend(_SequentialEstimateMany):
             summary={"bp_us": tot_bp, "bs_us": tot_bs,
                      "measured_ops": measured, "total_ops": len(workload.ops),
                      "coverage": measured / len(workload.ops)},
-            notes=("wall-clock of interpret-mode Pallas tiles "
-                   "(correctness-path on CPU; see benchmarks/kernels_bench)",)
+            notes=("wall-clock of interpret-mode Pallas kernels over full "
+                   "op dims (correctness-path on CPU; see "
+                   "benchmarks/pallas_bench)",)
             if measured else ())
 
 

@@ -156,7 +156,137 @@ def test_layout_aware_matmul_dispatch():
     y8, layout8 = ops.layout_aware_matmul(x, w8.astype(jnp.int32) - 0,
                                           weight_bits=8)
     assert layout8.value == "BP"
+    # lossless: unsigned 8-bit words no longer wrap through int8 (PR 9)
     np.testing.assert_array_equal(
         np.asarray(y8),
-        np.asarray(x.astype(jnp.int32) @ w8.astype(jnp.int8).astype(
-            jnp.int32)))
+        np.asarray(x.astype(jnp.int32) @ w8.astype(jnp.int32)))
+
+
+# ----------------------------------------- grid tiling (un-clamped) --------
+
+def test_tiling_pads_only_to_hardware_minimum():
+    from repro.kernels import tiling as tl
+
+    t = tl.bp_tiling(1, 100, 10)
+    assert t.dims == (1, 100, 10)
+    assert t.padded_dims == (32, 128, 128)   # BP hw minimum, not 128^3
+    assert t.grid == (1, 1, 1)
+    big = tl.bp_tiling(300, 4096, 512)
+    assert big.padded_dims == (384, 4096, 512)
+    gm, gn, ks = big.grid   # (M tiles, N tiles, K steps)
+    assert (gm * big.bm, ks * big.bk, gn * big.bn) == big.padded_dims
+    # unfused BS streams packed uint32 groups: K minimum is 256 words
+    bs = tl.bs_tiling(1, 100, 10)
+    assert bs.padded_dims == (32, 256, 128)
+
+
+def test_grid_tiled_equals_single_tile():
+    """A problem that fits one tile gives the same result grid-tiled."""
+    rng = np.random.default_rng(21)
+    M, K, N = 96, 256, 192
+    x = jnp.asarray(rng.integers(-128, 128, (M, K), dtype=np.int32)
+                    ).astype(jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (K, N), dtype=np.int32)
+                    ).astype(jnp.int8)
+    one = bitparallel_matmul(x, w, block_m=96, block_n=192, block_k=256)
+    grid = bitparallel_matmul(x, w, block_m=32, block_n=128, block_k=128)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(grid))
+
+    bits = 4
+    wq = _rand_words(rng, K, N, bits)
+    planes = bitpack(wq, bits)
+    one = bitserial_matmul(x, planes, block_m=96, block_n=192, block_k=256)
+    grid = bitserial_matmul(x, planes, block_m=32, block_n=128, block_k=256)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(grid))
+
+
+def test_unclamped_deep_k_is_exact_int32():
+    """Regression for the f32-accumulator era: at K=4096 the integer
+    partial sums exceed f32's 24-bit mantissa, so only the int32
+    accumulation path stays bit-exact once ops run un-clamped."""
+    rng = np.random.default_rng(4096)
+    M, K, N = 8, 4096, 128
+    # same-sign operands: partial sums grow monotonically past 2^24
+    x = jnp.asarray(rng.integers(64, 128, (M, K), dtype=np.int32)
+                    ).astype(jnp.int8)
+    w = jnp.asarray(rng.integers(64, 128, (K, N), dtype=np.int32)
+                    ).astype(jnp.int8)
+    got = np.asarray(bitparallel_matmul(x, w))
+    want = np.asarray(x).astype(np.int64) @ np.asarray(w).astype(np.int64)
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, want)
+    # and the magnitudes really do exercise the f32-unsafe range
+    assert np.abs(want).max() > (1 << 24)
+
+
+# ------------------------------------- fused bitpack-matmul (ISSUE 9) ------
+
+@settings(max_examples=12, deadline=None)
+@given(bits=st.sampled_from([1, 4, 8, 16]),
+       m=st.sampled_from([1, 8, 33]),
+       k=st.sampled_from([17, 100, 256]),
+       n=st.sampled_from([10, 64, 129]))
+def test_fused_matches_unfused_and_ref(bits, m, k, n):
+    """Differential suite: one-kernel fused bitpack-matmul == the unfused
+    pack_weights -> matmul_bs pipeline == the plain-integer reference --
+    ragged K, signed activations, widths {1, 4, 8, 16}."""
+    rng = np.random.default_rng(bits * 7919 + m * 131 + k * 17 + n)
+    x = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int32)
+                    ).astype(jnp.int8)
+    w = jnp.asarray(rng.integers(0, 1 << bits, (k, n)).astype(np.int32))
+    fused = np.asarray(ops.matmul_bs_fused(x, w, bits))
+    planes = ops.pack_weights(w.astype(jnp.uint32), bits)
+    unfused = np.asarray(ops.matmul_bs(x, planes))
+    want = (np.asarray(x).astype(np.int64)
+            @ np.asarray(w).astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(fused, want)
+    np.testing.assert_array_equal(unfused, want)
+
+
+def test_planned_matmul_fuse_pack_dispatch():
+    """fuse_pack=True routes the BS side through the fused kernel and
+    stays bit-exact with the unfused plan path."""
+    from repro.core.cost_model import Layout
+
+    rng = np.random.default_rng(31)
+    x = jnp.asarray(rng.integers(0, 8, (128, 64), dtype=np.int32)).astype(
+        jnp.int8)
+    w = _rand_words(rng, 64, 128, 2).astype(jnp.int32)
+    y_f, lay_f = ops.planned_matmul(x, w, weight_bits=2, fuse_pack=True)
+    y_u, lay_u = ops.planned_matmul(x, w, weight_bits=2, fuse_pack=False)
+    assert lay_f is Layout.BS and lay_u is Layout.BS
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_u))
+
+
+def test_bp_weight_dtype_is_lossless():
+    assert ops.bp_weight_dtype(1) == jnp.int8
+    assert ops.bp_weight_dtype(7) == jnp.int8
+    assert ops.bp_weight_dtype(8) == jnp.int16   # 255 doesn't fit int8
+    assert ops.bp_weight_dtype(15) == jnp.int16
+    assert ops.bp_weight_dtype(16) == jnp.int32
+    assert ops.bp_weight_dtype(32) == jnp.int32
+
+
+# --------------------------------------- pallas-bench regression gate ------
+
+def test_pallas_bench_regression_gate():
+    from repro.kernels.bench import check_pallas_regression
+
+    base = {"cases": [{"name": "gemv/w4/bp", "us": 10000.0},
+                      {"name": "gemv/w4/bs_fused", "us": 500.0}]}
+    ok, msg = check_pallas_regression(
+        {"cases": [{"name": "gemv/w4/bp", "us": 11000.0}]}, base)
+    assert ok and "0 regression" in msg
+    # >50% over a super-floor baseline fails (exit-3 path in the CLI)
+    ok, msg = check_pallas_regression(
+        {"cases": [{"name": "gemv/w4/bp", "us": 16000.0}]}, base)
+    assert not ok and "gemv/w4/bp" in msg
+    # sub-floor baselines never gate: 4x over 500us is runner jitter
+    ok, _ = check_pallas_regression(
+        {"cases": [{"name": "gemv/w4/bs_fused", "us": 2000.0}]}, base,
+        floor_us=2000.0)
+    assert ok
+    # unknown cases (new shapes/widths) pass with a note
+    ok, msg = check_pallas_regression(
+        {"cases": [{"name": "new/w1/bp", "us": 9e9}]}, base)
+    assert ok and "1 new" in msg

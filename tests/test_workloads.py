@@ -162,6 +162,66 @@ def test_pallas_backend_measures_matmul_tiles():
     (row,) = rep.ops
     assert row.supported and row.bp_us > 0 and row.bs_us > 0
     assert rep.summary["measured_ops"] == 1
+    # un-clamped: true and padded dims are both on the report (gemv is
+    # 1 x 4096 x 512; padding only lifts m to the sublane minimum)
+    assert row.dims == (1, 4096, 512)
+    assert row.padded_dims[1:] == (4096, 512) and row.padded_dims[0] >= 1
+
+
+def test_pallas_backend_conv_dims_match_executor_lowering():
+    """PR-9 regression: conv lowers to the im2col GEMV ExecutorBackend
+    prices -- (op.n, op.k, 1) -- not the (op.n, op.k, op.n) square the
+    old `m, k, n = op.n, op.k, op.n` bug measured."""
+    from repro.workloads import PallasBackend
+
+    be = PallasBackend()
+    vgg_convs = [op for op in get_workload("vgg").ops if op.kind == "conv"]
+    assert vgg_convs
+    for op in vgg_convs:
+        assert be._dims(op) == (op.n, op.k, 1)
+    # and the full estimate records those dims on every conv row, even
+    # ones too large to measure (over budget -> honest modelled row)
+    rep = be.estimate(get_workload("vgg13"))
+    conv_rows = [r for r in rep.ops if r.kind == "conv"]
+    by_name = {op.name: op for op in get_workload("vgg13").ops}
+    for r in conv_rows:
+        op = by_name[r.op]
+        assert r.dims == (op.n, op.k, 1)
+        if not r.supported:
+            assert "over budget" in r.note
+
+
+def test_pallas_backend_runs_true_width_and_rejects_over_32():
+    """PR-9 regression: no `min(width, 8)` clamp. A 16-bit op really
+    runs 16 plane passes (the note says so); width > 32 is an honest
+    unsupported row, never a silently narrowed launch."""
+    from repro.workloads import PallasBackend, Workload as W
+
+    w16 = W(name="w16", ops=(
+        Op(name="mm", kind="matmul", m=4, k=64, n=64, width=16),))
+    rep = PallasBackend(tile=32, reps=1).estimate(w16)
+    (row,) = rep.ops
+    assert row.supported and "@16b" in row.note
+
+    w48 = W(name="w48", ops=(
+        Op(name="mm", kind="matmul", m=4, k=64, n=64, width=48),))
+    rep = PallasBackend(tile=32, reps=1).estimate(w48)
+    (row,) = rep.ops
+    assert not row.supported and "unsupported: width 48" in row.note
+    assert row.dims == (4, 64, 64)
+
+
+def test_pallas_backend_over_budget_row_reports_padded_work():
+    from repro.workloads import PallasBackend, Workload as W
+
+    w = W(name="big", ops=(
+        Op(name="mm", kind="matmul", m=512, k=512, n=512, width=8),))
+    rep = PallasBackend(max_macs=2 ** 20).estimate(w)
+    (row,) = rep.ops
+    assert not row.supported and "over budget" in row.note
+    assert row.dims == (512, 512, 512)
+    assert row.padded_dims is not None
+    assert rep.summary["measured_ops"] == 0
 
 
 # ------------------------------------------------- arch (advisor) route ----
