@@ -30,18 +30,24 @@ Subcommands:
                        simulated concurrent requests from the arch traffic
                        mix through per-request plan compilation
                        (content-addressed plan cache) and phase-grouped
-                       continuous batching; p50/p99 plan-compile and
-                       execute latencies plus cache counters land in
+                       continuous batching; every batch group executes as
+                       ONE compiled Pallas schedule (plan.pallas_exec),
+                       so p50/p99 execute latencies are warm measured
+                       kernel wall-clock with executable-compile cost
+                       split out, landing with cache counters in
                        ``bench-artifacts/serve.json``.  ``--baseline``
-                       gates p99 execute latency against a committed
+                       gates p99 warm execute latency against a committed
                        artifact (the CI bench-smoke regression check).
 * ``pallas-bench``  -- time the grid-tiled Pallas kernels over the full
                        (un-clamped) Table-5/6 matmul shapes: BP word
                        kernel vs fused and unfused BS bitplane kernels
-                       per weight width.  Writes ``BENCH_pallas.json``
-                       (versioned envelope); ``--baseline`` gates every
-                       per-case median against the committed artifact
-                       (exit 3 on regression, like serve-bench).
+                       per weight width.  ``--chained`` adds the
+                       chained-vs-per-step pair per multi-step app (ONE
+                       jitted schedule program vs host dispatch).  Writes
+                       ``BENCH_pallas.json`` (versioned envelope);
+                       ``--baseline`` gates every per-case median against
+                       the committed artifact (exit 3 on regression,
+                       like serve-bench).
 * ``trace-diff``    -- the differential harness: reconcile the
                        jaxpr-traced ``traced/<id>`` workloads against the
                        hand-written ``arch/<id>`` formulas op by op
@@ -399,21 +405,29 @@ def cmd_serve_bench(args) -> int:
     payload = run_serve_bench(
         n, seed=args.seed, sys=system,
         cache_dir=args.cache_dir or None, persist=not args.no_cache,
-        max_batch=args.max_batch)
+        max_batch=args.max_batch, execute_budget=args.execute_budget)
 
     cache = payload["cache"]
+    exes = payload["executables"]
     comp, execu = payload["plan_compile_us"], payload["execute_us"]
+    ecomp = payload["execute_compile_us"]
     print(f"serve-bench: {n} requests, "
           f"{payload['distinct_plans_bound']} distinct operating points, "
           f"{payload['batches']['count']} batches "
-          f"({payload['batches']['signatures']} layout phases), "
-          f"{payload['mesh_devices']} device(s)")
+          f"({payload['batches']['signatures']} layout phases)")
     print(f"  plan cache: {cache['hits']}/{cache['lookups']} served "
           f"(hit_rate={cache['hit_rate']:.3f} mem={cache['mem_hits']} "
           f"disk={cache['disk_hits']} miss={cache['misses']} "
           f"evict={cache['evictions']})")
+    print(f"  executables: {exes['entries']} compiled "
+          f"(hit_rate={exes['hit_rate']:.3f}), "
+          f"{exes['measured_steps']} measured / "
+          f"{exes['modelled_steps']} modelled step(s) "
+          f"@ budget {exes['execute_budget']} padded MACs")
     print(f"  plan compile: p50={comp['p50']:.0f}us p99={comp['p99']:.0f}us")
-    print(f"  execute:      p50={execu['p50']:.0f}us p99={execu['p99']:.0f}us")
+    print(f"  execute (warm Pallas): p50={execu['p50']:.0f}us "
+          f"p99={execu['p99']:.0f}us; "
+          f"exe compile: p50={ecomp['p50']:.0f}us p99={ecomp['p99']:.0f}us")
     print(f"  throughput: {payload['throughput_rps']:.0f} req/s; "
           f"transposes amortized: "
           f"{payload['simulated']['transpose_cycles_saved']} cycles saved")
@@ -466,14 +480,26 @@ def cmd_pallas_bench(args) -> int:
         shapes = tuple((s, known[s]) for s in args.shape)
 
     payload = run_pallas_bench(quick=args.quick, reps=args.reps,
-                               seed=args.seed, shapes=shapes)
+                               seed=args.seed, shapes=shapes,
+                               chained=args.chained)
     print(f"pallas-bench: {len(payload['cases'])} cases, "
           f"reps={payload['reps']} quick={payload['quick']}")
     for c in payload["cases"]:
-        m, k, n = c["shape"]
-        print(f"  {c['name']:24s} {m}x{k}x{n} "
-              f"padded={'x'.join(map(str, c['padded']))} "
-              f"median_us={c['us']:.0f}")
+        if "shape" in c:
+            m, k, n = c["shape"]
+            print(f"  {c['name']:24s} {m}x{k}x{n} "
+                  f"padded={'x'.join(map(str, c['padded']))} "
+                  f"median_us={c['us']:.0f}")
+        else:  # chained-vs-per-step pair rows (whole-schedule timings)
+            print(f"  {c['name']:24s} steps={c['steps']} w{c['width']} "
+                  f"median_us={c['us']:.0f}")
+    for app, m in payload.get("chained", {}).items():
+        if "skipped" in m:
+            print(f"  chained {app}: skipped ({m['skipped']})")
+        else:
+            print(f"  chained {app}: x{m['speedup']:.2f} vs per-step "
+                  f"({m['steps']} measured step(s), "
+                  f"compile {m['compile_us'] / 1e3:.0f}ms)")
 
     path = args.out or os.path.join(_artifact_dir(), "BENCH_pallas.json")
     write_artifact(path, "pallas", payload,
@@ -599,6 +625,8 @@ def cmd_tables(args) -> int:
 
 
 def main(argv=None) -> int:
+    from repro.serve.batcher import DEFAULT_EXECUTE_BUDGET
+
     ap = argparse.ArgumentParser(prog="python -m repro", description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -711,6 +739,12 @@ def main(argv=None) -> int:
                               "(optional @row-bus-bits), e.g. 128x512x64")
     p_serve.add_argument("--max-batch", type=int, default=64,
                          help="continuous-batching slot budget per group")
+    p_serve.add_argument("--execute-budget", type=int,
+                         default=DEFAULT_EXECUTE_BUDGET, metavar="MACS",
+                         help="padded-MAC budget per Pallas launch on the "
+                              "execute path; over-budget steps stay "
+                              "modelled-only rows (default "
+                              f"{DEFAULT_EXECUTE_BUDGET})")
     p_serve.add_argument("--cache-dir", default=None, metavar="DIR",
                          help="plan-cache directory (default "
                               "<artifact-dir>/plan-cache)")
@@ -747,6 +781,11 @@ def main(argv=None) -> int:
                       metavar="NAME",
                       help="restrict to named bench shape(s) (e.g. "
                            "gemv, vgg_fc_out); repeatable; default all")
+    p_pb.add_argument("--chained", action="store_true",
+                      help="also time chained-vs-per-step schedule "
+                           "execution (ONE jitted program via "
+                           "plan.pallas_exec vs host dispatch) for the "
+                           "multi-step Table-6 apps")
     p_pb.add_argument("--out", default=None, metavar="PATH",
                       help="artifact path (default "
                            "<artifact-dir>/BENCH_pallas.json)")

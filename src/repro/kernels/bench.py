@@ -11,6 +11,15 @@ GEMV 1x4096x512, the VGG classifier FCs) at weight widths {1, 4, 8, 16}
   *on* the timed path (the materialized-plane-artifact cost fusion
   removes; the fused-vs-unfused delta is the point of the comparison).
 
+With ``chained=True`` the run also times whole-schedule execution for
+the multi-step Table-6 apps (:data:`CHAINED_APPS`): the per-step host
+dispatch of ``run_schedule`` vs the ONE-jitted-program executor of
+``plan.pallas_exec`` (weights device-resident, step outputs threaded,
+one host round-trip).  The ``chained/<app>/{per_step,chained}`` pair per
+app is the measured cost of host-side schedule dispatch -- the delta a
+real PIM controller never pays -- and both paths are asserted bit-exact
+before their timings enter the artifact.
+
 Each case is the median of ``reps`` post-warmup calls with
 ``block_until_ready``.  The payload is committed to ``BENCH_pallas.json``
 under the ``repro.artifacts`` envelope and gated in CI by
@@ -42,6 +51,10 @@ BENCH_SHAPES: tuple[tuple[str, tuple[int, int, int]], ...] = (
 BENCH_WIDTHS: tuple[int, ...] = (1, 4, 8, 16)
 #: quick (CI smoke) subset: the committed acceptance widths
 QUICK_WIDTHS: tuple[int, ...] = (4, 8, 16)
+#: apps for the chained-vs-per-step pair: the VGG classifier chains
+#: (3 measured FC steps each; convs exceed any honest interpret-mode
+#: budget and stay modelled) + the single-step GEMV control
+CHAINED_APPS: tuple[str, ...] = ("vgg13", "vgg16", "vgg19", "gemv")
 
 
 def _clock(fn, reps: int) -> float:
@@ -56,14 +69,68 @@ def _clock(fn, reps: int) -> float:
     return statistics.median(samples)
 
 
+def run_chained_bench(*, apps=CHAINED_APPS, reps: int = 5, seed: int = 0,
+                      interpret: bool = True,
+                      max_macs: Optional[int] = None
+                      ) -> tuple[list[dict], dict]:
+    """Chained-vs-per-step pairs: ``(cases, per-app meta)``.
+
+    ``chained/<app>/per_step`` times :func:`plan.pallas.run_schedule` --
+    one jitted-wrapper dispatch, weight conversion, and host transfer
+    per measured step.  ``chained/<app>/chained`` times the warm
+    ``ScheduleExecutable.run()`` of the same schedule -- weights already
+    device-resident, outputs threaded in-program, one host round-trip.
+    Identical threaded dataflow on both paths, asserted bit-exact before
+    either timing enters the artifact.
+    """
+    from repro.plan import (compile_plan, compile_schedule,
+                            lower_plan_pallas, run_schedule, synth_inputs)
+    from repro.workloads import get_workload
+
+    cases: list[dict] = []
+    meta: dict = {}
+    for app in apps:
+        w = get_workload(app)
+        kwargs = {} if max_macs is None else {"max_macs": max_macs}
+        sched = lower_plan_pallas(compile_plan(w), w, **kwargs)
+        n_meas = len(sched.measured_steps)
+        if not n_meas:
+            meta[app] = {"skipped": "no measured steps under budget"}
+            continue
+        inputs = synth_inputs(sched, seed=seed)
+        per_us = _clock(
+            lambda: run_schedule(sched, inputs, interpret=interpret), reps)
+        exe = compile_schedule(sched, inputs, interpret=interpret)
+        chained_us = _clock(exe.run, reps)
+        per = run_schedule(sched, inputs, interpret=interpret)
+        got = exe.run()
+        for op, y in got.items():
+            assert np.array_equal(y, per[op]), \
+                f"chained/per-step divergence at {app}:{op}"
+        base = {"app": app, "steps": n_meas,
+                "width": sched.measured_steps[0].width}
+        cases.append({**base, "name": f"chained/{app}/per_step",
+                      "path": "per_step", "us": per_us})
+        cases.append({**base, "name": f"chained/{app}/chained",
+                      "path": "chained", "us": chained_us})
+        meta[app] = {"steps": n_meas,
+                     "modelled": len(sched.steps) - n_meas,
+                     "compile_us": exe.compile_us,
+                     "per_step_us": per_us, "chained_us": chained_us,
+                     "speedup": per_us / chained_us}
+    return cases, meta
+
+
 def run_pallas_bench(*, quick: bool = False, reps: Optional[int] = None,
                      seed: int = 0, interpret: bool = True,
-                     shapes=None, widths=None) -> dict:
+                     shapes=None, widths=None, chained: bool = False,
+                     chained_apps=None) -> dict:
     """Time every case; returns the BENCH_pallas.json payload dict."""
     import jax.numpy as jnp
 
     from repro.kernels import ops as kops
     from repro.kernels import tiling as tl
+    from repro.util import rand_words
 
     if shapes is None:
         shapes = BENCH_SHAPES
@@ -77,8 +144,7 @@ def run_pallas_bench(*, quick: bool = False, reps: Optional[int] = None,
         x = jnp.asarray(rng.integers(-8, 8, (m, k), dtype=np.int32)
                         ).astype(jnp.int8)
         for bits in widths:
-            w = jnp.asarray(rng.integers(0, 1 << min(bits, 31),
-                                         (k, n)).astype(np.int32))
+            w = jnp.asarray(rand_words(rng, bits, (k, n)))
             wp = w.astype(kops.bp_weight_dtype(bits))
             wu = w.astype(jnp.uint32)
 
@@ -102,8 +168,15 @@ def run_pallas_bench(*, quick: bool = False, reps: Optional[int] = None,
                     "padded": list(tiling.padded_dims),
                     "us": _clock(fn, reps),
                 })
-    return {"reps": reps, "quick": quick, "interpret": interpret,
-            "seed": seed, "cases": cases}
+    payload = {"reps": reps, "quick": quick, "interpret": interpret,
+               "seed": seed, "cases": cases}
+    if chained:
+        ch_cases, ch_meta = run_chained_bench(
+            apps=chained_apps or CHAINED_APPS, reps=reps, seed=seed,
+            interpret=interpret)
+        cases.extend(ch_cases)
+        payload["chained"] = ch_meta
+    return payload
 
 
 def check_pallas_regression(payload: dict, baseline_payload: dict,

@@ -29,6 +29,26 @@ def bp_weight_dtype(weight_bits: int):
     return jnp.int32
 
 
+def thread_activations(y: jax.Array, m: int, k: int) -> jax.Array:
+    """Adapt a producer step's int32 ``[M', N']`` result into a consumer
+    step's int8 ``[m, k]`` activation operand.
+
+    The deterministic dataflow adapter of the chained executor
+    (DESIGN.md Sec. 15): flatten, tile/truncate to ``m * k`` elements,
+    reshape, and wrap to int8 -- activations always flow in word form,
+    and int32 -> int8 is the mod-2^8 requantize numpy and XLA define
+    identically.  The chained program, per-step ``run_schedule``, and the
+    numpy ``reference_results`` all use this exact adapter, which is what
+    keeps the three bit-exact with real (not synthetic) dataflow between
+    steps.  Pure jnp, so it traces into the one jitted schedule program.
+    """
+    flat = y.reshape(-1)
+    need = m * k
+    if flat.shape[0] < need:
+        flat = jnp.tile(flat, -(-need // flat.shape[0]))
+    return flat[:need].reshape(m, k).astype(jnp.int8)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def pack_weights(w: jax.Array, bits: int, interpret: bool = True):
     """BP -> BS layout conversion (the transpose unit)."""

@@ -242,8 +242,18 @@ def _run_programs(prog_arrays: dict, geometry: Geometry, mesh,
 
 
 def default_mesh():
-    """The serving layer's 1-D ``("data",)`` mesh over local devices (or
-    None on a single device)."""
-    from repro.serve.bench import default_mesh as _dm
+    """A 1-D ``("data",)`` mesh over every local device, or None on a
+    single device (``shard`` degrades to a no-op either way).
 
-    return _dm()
+    Lived in ``serve.bench`` until PR 10; the serve execute path now
+    runs compiled Pallas schedules (single-program, no mesh reduction),
+    so machine-bench owns the mesh helper."""
+    import jax
+
+    devs = jax.devices()
+    if len(devs) < 2:
+        return None
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(devs), ("data",))

@@ -14,7 +14,11 @@ Public surface (see README.md in this directory and DESIGN.md Sec. 10)::
 
     from repro.plan import lower_plan_pallas, run_schedule
     sched = lower_plan_pallas(p, get_workload("aes"))   # measured twin
-    run_schedule(sched, synth_inputs(sched))            # Pallas sequence
+    run_schedule(sched, synth_inputs(sched))            # per-step mode
+
+    from repro.plan import compile_schedule              # chained mode
+    exe = compile_schedule(sched)   # ONE jitted program, weights resident
+    exe.run(); exe.time()           # warm steady-state wall-clock
 
 CLI: ``python -m repro plan <workload> [--geometry RxCxA] [--execute]
 [--pallas]``.
@@ -38,6 +42,12 @@ from repro.plan.pallas import (  # noqa: F401
     run_schedule,
     synth_inputs,
     time_schedule,
+)
+from repro.plan.pallas_exec import (  # noqa: F401
+    ExecutableCache,
+    ScheduleExecutable,
+    compile_schedule,
+    schedule_key,
 )
 from repro.plan.scheduler import (  # noqa: F401
     PlanError,

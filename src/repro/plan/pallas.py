@@ -87,6 +87,11 @@ class PallasSchedule:
     workload: str
     steps: tuple[PallasStep, ...]
     fuse_pack: bool
+    #: step-index dataflow edges (producer < consumer), copied from
+    #: ``Workload.edges()`` at lowering (step i == op i); empty means
+    #: "none declared" and falls back to the same linear chain the
+    #: Workload IR defaults to
+    deps: tuple[tuple[int, int], ...] = ()
 
     @property
     def measured_steps(self) -> tuple[PallasStep, ...]:
@@ -96,9 +101,38 @@ class PallasSchedule:
     def n_repacks(self) -> int:
         return sum(1 for s in self.steps if s.repack)
 
+    def edges(self) -> tuple[tuple[int, int], ...]:
+        """Step-index dataflow edges, linear chain when none declared."""
+        if self.deps:
+            return self.deps
+        return tuple((i, i + 1) for i in range(len(self.steps) - 1))
+
+    def threaded_producers(self) -> dict[str, str]:
+        """``{consumer op: producer op}`` for every measured step fed by
+        an earlier *measured* step along :meth:`edges`.
+
+        The dataflow contract shared by the chained executor
+        (``plan.pallas_exec``), per-step :func:`run_schedule`, and the
+        numpy :func:`reference_results`: a consumer's activation is its
+        nearest measured producer's result through
+        ``kernels.ops.thread_activations``.  Steps with no measured
+        producer (entry steps, or steps fed only by modelled-only rows --
+        there is no computed tensor to thread) consume synthetic
+        operands instead.
+        """
+        measured = {i for i, s in enumerate(self.steps) if s.measured}
+        best: dict[int, int] = {}
+        for i, j in self.edges():
+            if i in measured and j in measured and i < j:
+                if best.get(j, -1) < i:
+                    best[j] = i
+        return {self.steps[j].op: self.steps[i].op
+                for j, i in sorted(best.items())}
+
     def to_dict(self) -> dict:
         return {"workload": self.workload, "fuse_pack": self.fuse_pack,
                 "n_repacks": self.n_repacks,
+                "deps": [list(e) for e in self.deps],
                 "steps": [s.to_dict() for s in self.steps]}
 
 
@@ -173,43 +207,73 @@ def lower_plan_pallas(plan: LayoutPlan, workload, *,
             padded_dims=t.padded_dims,
             note="repack folded into fused kernel" if fused else ""))
     return PallasSchedule(workload=workload.name, steps=tuple(steps),
-                          fuse_pack=fuse_pack)
+                          fuse_pack=fuse_pack,
+                          deps=tuple(workload.edges()))
 
 
 def synth_inputs(schedule: PallasSchedule, seed: int = 0) -> dict:
     """Random (x, w) operand pairs for every measured step.
 
-    x: int8 activations; w: unsigned ``width``-bit words (int32 storage)
-    -- the canonical word form both kernels consume.
+    x: int8 activations; w: unsigned ``width``-bit words (int32 storage,
+    full uint32 range at width 32 -- see ``util.rand_words``) -- the
+    canonical word form both kernels consume.  Threaded steps ignore
+    their synthetic x at execution; it is still generated so per-step and
+    chained modes share one input pytree.
     """
+    from repro.util import rand_words
+
     rng = np.random.default_rng(seed)
     out = {}
     for s in schedule.measured_steps:
         m, k, n = s.dims
-        hi = 1 << min(s.width, 31)
         out[s.op] = (
             rng.integers(-128, 128, (m, k), dtype=np.int8),
-            rng.integers(0, hi, (k, n)).astype(np.int32),
+            rand_words(rng, s.width, (k, n)),
         )
     return out
 
 
+def _thread_np(y: np.ndarray, m: int, k: int) -> np.ndarray:
+    """numpy twin of ``kernels.ops.thread_activations`` (bit-identical:
+    same flatten/tile/truncate/reshape and the same mod-2^8 wrap)."""
+    flat = y.reshape(-1)
+    need = m * k
+    if flat.size < need:
+        flat = np.tile(flat, -(-need // flat.size))
+    return flat[:need].reshape(m, k).astype(np.int8)
+
+
 def run_schedule(schedule: PallasSchedule, inputs: dict, *,
-                 interpret: bool = True) -> dict:
-    """Execute every measured step; return {op: int32 [m, n] result}.
+                 interpret: bool = True, thread: bool = True) -> dict:
+    """Execute every measured step from the host; return
+    {op: int32 [m, n] result}.
 
     ``inputs`` maps op name -> (x, w) with w in word form (see
     :func:`synth_inputs`).  BS steps pack (or fuse the pack of) their
     weights per the schedule; BP steps run the word kernel losslessly.
+
+    ``thread=True`` (default) feeds each step's activation from its
+    nearest measured producer along ``schedule.edges()`` via
+    ``kernels.ops.thread_activations`` -- the same dataflow the chained
+    executor (``plan.pallas_exec``) compiles, making per-step mode its
+    bit-exact differential reference (DESIGN.md Sec. 15).
+    ``thread=False`` runs every step on its own synthetic operands (the
+    per-kernel differential mode the executor-vs-simulator tests use).
     """
     import jax.numpy as jnp
 
     from repro.kernels import ops as kops
 
+    producer = schedule.threaded_producers() if thread else {}
     results = {}
     for s in schedule.measured_steps:
         x, w = inputs[s.op]
-        x = jnp.asarray(x)
+        src = producer.get(s.op)
+        if src in results:
+            m, k, _ = s.dims
+            x = kops.thread_activations(jnp.asarray(results[src]), m, k)
+        else:
+            x = jnp.asarray(x)
         w = jnp.asarray(w)
         if s.layout is Layout.BP:
             y = kops.matmul_bp(x, w.astype(kops.bp_weight_dtype(s.width)),
@@ -224,11 +288,19 @@ def run_schedule(schedule: PallasSchedule, inputs: dict, *,
     return results
 
 
-def reference_results(schedule: PallasSchedule, inputs: dict) -> dict:
-    """Plain-integer references (int32 wraparound) for every measured step."""
+def reference_results(schedule: PallasSchedule, inputs: dict, *,
+                      thread: bool = True) -> dict:
+    """Plain-integer references (int32 wraparound) for every measured
+    step, with the same producer->consumer threading as
+    :func:`run_schedule` (``thread=False`` for synthetic operands)."""
+    producer = schedule.threaded_producers() if thread else {}
     out = {}
     for s in schedule.measured_steps:
         x, w = inputs[s.op]
+        src = producer.get(s.op)
+        if src in out:
+            m, k, _ = s.dims
+            x = _thread_np(out[src], m, k)
         out[s.op] = (x.astype(np.int64) @ w.astype(np.int64)).astype(
             np.int32)
     return out
@@ -241,6 +313,12 @@ def time_schedule(schedule: PallasSchedule, inputs: dict, *,
     Returns one record per schedule step: ``{op, kind, layout, kernel,
     repack, dims, padded_dims, width, us, note}`` -- ``us`` is None for
     modelled-only rows.  One warmup launch per step amortizes tracing.
+
+    Timing is memoized by ``(padded_dims, width, kernel)`` within one
+    call: a repeated layer (VGG-style fc0/fc1 at identical shape) would
+    otherwise re-trace and re-warm a fresh closure per step for a number
+    that is shape-determined anyway.  Memoized rows carry a note naming
+    the step they reuse.
     """
     import jax
     import jax.numpy as jnp
@@ -248,12 +326,23 @@ def time_schedule(schedule: PallasSchedule, inputs: dict, *,
     from repro.kernels import ops as kops
 
     rows = []
+    memo: dict[tuple, tuple[float, str]] = {}
     for s in schedule.steps:
         rec = {"op": s.op, "kind": s.kind, "layout": s.layout.value,
                "kernel": s.kernel, "repack": s.repack, "dims": s.dims,
                "padded_dims": s.padded_dims, "width": s.width,
                "us": None, "note": s.note}
         if s.measured:
+            memo_key = (s.padded_dims, s.width, s.kernel)
+            hit = memo.get(memo_key)
+            if hit is not None:
+                rec["us"] = hit[0]
+                memo_note = (f"timing memoized from {hit[1]} "
+                             "(identical padded dims/width/path)")
+                rec["note"] = (f"{rec['note']}; {memo_note}"
+                               if rec["note"] else memo_note)
+                rows.append(rec)
+                continue
             x, w = inputs[s.op]
             x = jnp.asarray(x)
             w = jnp.asarray(w)
@@ -281,5 +370,6 @@ def time_schedule(schedule: PallasSchedule, inputs: dict, *,
                 jax.block_until_ready(fn())
                 ts.append((time.perf_counter() - t0) * 1e6)
             rec["us"] = statistics.median(ts)
+            memo[memo_key] = (rec["us"], s.op)
         rows.append(rec)
     return rows

@@ -1,0 +1,316 @@
+"""Device-resident schedule execution: one jitted program per plan.
+
+``run_schedule`` (``plan.pallas``) dispatches a :class:`PallasSchedule`
+one step at a time from the host -- a device round-trip, a fresh weight
+conversion, and a ``block_until_ready`` per kernel.  A PIM controller
+pays none of that: weights are resident in the arrays, step results feed
+successors directly, and the host sees one completion.  This module is
+that execution model (DESIGN.md Sec. 15):
+
+* :func:`compile_schedule` lowers an entire schedule -- every measured
+  step plus its bp2bs/bs2bp repack -- into ONE jitted program.  Weights
+  are converted/packed once at *compile* time into a device-resident
+  param pytree: BP steps hold words at ``bp_weight_dtype``, BS-resident
+  steps hold pre-packed ``[bits, K/32, N]`` planes.  Boundary repacks the
+  plan charges stay *in* the program: a ``bp2bs`` step keeps word-form
+  params and packs in-flight (through the fused bitpack-matmul when the
+  schedule fused it), a ``bs2bp`` step keeps plane-form params and
+  unpacks in-flight.
+* Step results thread to successor activations along the Workload
+  ``deps`` DAG (``kernels.ops.thread_activations``) -- real dataflow, so
+  XLA cannot elide or reorder the chain, and synthetic operands exist
+  only at entry steps.
+* Entry activations are donated (``donate_argnums``): XLA may alias
+  intermediates into their buffers.  The executable keeps host copies
+  and re-places them on every ``run()``, so re-running is always safe
+  and bit-identical.
+
+Per-step ``run_schedule`` stays authoritative as the differential
+reference: with the same threading it is bit-exact with the chained
+program and with the numpy ``reference_results`` (pinned by
+``tests/test_pallas_exec.py``).
+
+Executables are content-addressed (:class:`ExecutableCache`, the
+``serve.plan_cache`` sha256 pattern) by canonical schedule dict + kernel
+source fingerprint + seed + interpret flag -- in-memory only, because an
+executable holds live jitted closures and device buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import statistics
+import time
+import warnings
+from collections import OrderedDict
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.cost_model import Layout
+from repro.plan.pallas import MAX_BS_WIDTH, PallasSchedule, synth_inputs
+
+#: default :class:`ExecutableCache` capacity -- live executables are far
+#: heavier than cached plans (jitted closures + device-resident params),
+#: but one serve-bench traffic mix lowers to only a few dozen distinct
+#: schedules under one execute budget
+DEFAULT_CAPACITY = 64
+
+
+def kernel_fingerprint() -> str:
+    """Source fingerprint of the executor and every module that
+    determines what a compiled schedule computes.
+
+    The provenance rule of ``serve.plan_cache``: editing any of these
+    must miss the executable cache, so the address hashes their source.
+    """
+    import repro.plan.pallas as pallas_mod
+    import repro.plan.pallas_exec as exec_mod
+    from repro.kernels import (bitpack, bitparallel_matmul, bitserial_matmul,
+                               fused_bitserial_matmul, ops, tiling)
+    from repro.util import source_fingerprint
+
+    return source_fingerprint(
+        exec_mod, pallas_mod, ops, tiling, bitpack, bitparallel_matmul,
+        bitserial_matmul, fused_bitserial_matmul)
+
+
+def schedule_key(schedule: PallasSchedule, *, seed: int = 0,
+                 interpret: bool = True,
+                 fingerprint: Optional[str] = None) -> str:
+    """Content address of a compiled schedule: sha256 over the canonical
+    schedule dict (steps, layouts, dims, repacks, deps, fuse_pack), the
+    synth seed, the interpret flag, and the kernel source fingerprint."""
+    blob = json.dumps(
+        {"schedule": schedule.to_dict(), "seed": seed,
+         "interpret": interpret,
+         "fingerprint": fingerprint or kernel_fingerprint()},
+        sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+@dataclasses.dataclass
+class ScheduleExecutable:
+    """A :class:`PallasSchedule` compiled to one jitted device program.
+
+    ``compile_us`` charges everything the steady state never pays again:
+    operand synthesis, weight conversion/packing into device residency,
+    tracing, XLA compilation, and the first (warming) execution.
+    ``run()``/``time()`` are the warm path.
+    """
+
+    schedule: PallasSchedule
+    key: str
+    compile_us: float
+    n_measured: int
+    n_modelled: int
+    entry_ops: tuple[str, ...]     #: steps consuming synthetic operands
+    threaded: dict                 #: {consumer op: producer op}
+    donate: bool
+    params_bytes: int              #: device-resident weight footprint
+    _fn: Any = dataclasses.field(repr=False)
+    _params: Any = dataclasses.field(repr=False)
+    _entry: dict = dataclasses.field(repr=False)   #: host entry copies
+    runs: int = 0
+
+    def run(self) -> dict:
+        """Execute the whole chained program once; returns
+        {op: int32 [m, n] numpy result} for every measured step.
+
+        Entry activations are re-placed from host copies each call (the
+        program donates its input buffers), so running twice is safe and
+        bit-identical -- the donation-regression contract.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        placed = {op: jnp.asarray(v) for op, v in self._entry.items()}
+        out = jax.block_until_ready(self._fn(placed, self._params))
+        self.runs += 1
+        return {op: np.asarray(y) for op, y in out.items()}
+
+    def time(self, reps: int = 5) -> float:
+        """Median warm wall-clock (us) of the whole chained program."""
+        self.run()  # warm (compile already ran once at build time)
+        samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            self.run()
+            samples.append((time.perf_counter() - t0) * 1e6)
+        return statistics.median(samples)
+
+    def summary(self) -> dict:
+        return {"key": self.key, "workload": self.schedule.workload,
+                "compile_us": self.compile_us,
+                "n_measured": self.n_measured,
+                "n_modelled": self.n_modelled,
+                "entry_ops": list(self.entry_ops),
+                "threaded": dict(self.threaded),
+                "donate": self.donate,
+                "params_bytes": self.params_bytes, "runs": self.runs}
+
+
+def compile_schedule(schedule: PallasSchedule,
+                     inputs: Optional[dict] = None, *, seed: int = 0,
+                     interpret: bool = True, donate: bool = True,
+                     key: Optional[str] = None) -> ScheduleExecutable:
+    """Compile ``schedule`` into ONE jitted program (module doc).
+
+    ``inputs``: optional ``{op: (x, w)}`` word-form operands (default:
+    :func:`plan.pallas.synth_inputs` with ``seed``).  Weights must be
+    canonical ``width``-bit words -- a boundary repack round-trips them
+    through the plane form, which truncates any bits above ``width``
+    (synthetic operands satisfy this by construction).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    from repro.kernels.bitpack import bitpack, bitunpack
+    from repro.kernels.bitparallel_matmul import bitparallel_matmul
+    from repro.kernels.bitserial_matmul import bitserial_matmul
+    from repro.kernels.fused_bitserial_matmul import fused_bitserial_matmul
+
+    t0 = time.perf_counter()
+    if inputs is None:
+        inputs = synth_inputs(schedule, seed=seed)
+    if key is None:
+        key = schedule_key(schedule, seed=seed, interpret=interpret)
+    producer = schedule.threaded_producers()
+    steps = schedule.measured_steps
+
+    def _as_planes(w, width):
+        return kops.pack_weights(w.astype(jnp.uint32), width,
+                                 interpret=interpret)
+
+    # ---- compile-time residency: convert/pack every weight once ------
+    params: dict[str, Any] = {}
+    entry: dict[str, np.ndarray] = {}
+    for s in steps:
+        x, w = inputs[s.op]
+        if s.op not in producer:
+            entry[s.op] = np.asarray(x)
+        w = jnp.asarray(w)
+        if s.layout is Layout.BP:
+            if s.repack == "bs2bp" and s.width <= MAX_BS_WIDTH:
+                # the operand arrives plane-resident; the plan-charged
+                # unpack is part of the program, not of compile
+                params[s.op] = _as_planes(w, s.width)
+            else:
+                params[s.op] = w.astype(kops.bp_weight_dtype(s.width))
+        elif s.repack == "bp2bs":
+            # word-resident: the plan-charged pack runs in-program
+            # (folded into the fused kernel when the schedule fused it)
+            params[s.op] = w
+        else:
+            params[s.op] = _as_planes(w, s.width)
+
+    def _bs(x, planes):
+        # mirror kops.matmul_bs: bitpack zero-pads K to a multiple of 32
+        k_planes = planes.shape[1] * 32
+        if x.shape[1] != k_planes:
+            x = jnp.pad(x, ((0, 0), (0, k_planes - x.shape[1])))
+        return bitserial_matmul(x, planes, interpret=interpret)
+
+    def program(xs, ps):
+        out = {}
+        for s in steps:
+            m, k, _n = s.dims
+            src = producer.get(s.op)
+            x = (kops.thread_activations(out[src], m, k)
+                 if src is not None else xs[s.op])
+            w = ps[s.op]
+            if s.layout is Layout.BP:
+                if s.repack == "bs2bp" and s.width <= MAX_BS_WIDTH:
+                    w = bitunpack(w, k).astype(
+                        kops.bp_weight_dtype(s.width))
+                y = bitparallel_matmul(x, w, interpret=interpret)
+            elif s.kernel == "fused_bitserial_matmul":
+                y = fused_bitserial_matmul(x, w, s.width,
+                                           interpret=interpret)
+            elif s.repack == "bp2bs":
+                y = _bs(x, bitpack(w.astype(jnp.uint32), s.width,
+                                   interpret=interpret))
+            else:
+                y = _bs(x, w)
+            out[s.op] = y
+        return out
+
+    fn = jax.jit(program, donate_argnums=(0,) if donate else ())
+    # build = trace + lower + compile + first (warming) run; the run
+    # consumes the placed entry buffers, which is why run() re-places
+    placed = {op: jnp.asarray(v) for op, v in entry.items()}
+    with warnings.catch_warnings():
+        # donation is best-effort: entries whose dtype/shape matches no
+        # output stay undonated, which is fine -- not worth a warning
+        # per compiled schedule
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        jax.block_until_ready(fn(placed, params))
+    compile_us = (time.perf_counter() - t0) * 1e6
+
+    return ScheduleExecutable(
+        schedule=schedule, key=key, compile_us=compile_us,
+        n_measured=len(steps),
+        n_modelled=len(schedule.steps) - len(steps),
+        entry_ops=tuple(entry), threaded=producer, donate=donate,
+        params_bytes=sum(int(np.prod(p.shape)) * p.dtype.itemsize
+                         for p in params.values()),
+        _fn=fn, _params=params, _entry=entry)
+
+
+class ExecutableCache:
+    """In-memory LRU of :class:`ScheduleExecutable`, content-addressed
+    by :func:`schedule_key`.
+
+    The serving steady state: every batch group whose representative
+    lowers to an identical schedule (same steps, layouts, dims, repacks,
+    deps) reuses one compiled program and its device-resident weights.
+    Unlike :class:`serve.plan_cache.PlanCache` there is no disk tier --
+    an executable holds live jitted closures and device buffers, so the
+    cache is per-process by nature; the source fingerprint still
+    guarantees an edit to any kernel misses.
+    """
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY,
+                 fingerprint: Optional[str] = None) -> None:
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1 (got {capacity})")
+        self.capacity = capacity
+        self.fingerprint = fingerprint or kernel_fingerprint()
+        self._mem: OrderedDict[str, ScheduleExecutable] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.puts = 0
+
+    def get_or_compile(self, schedule: PallasSchedule,
+                       inputs: Optional[dict] = None, *, seed: int = 0,
+                       interpret: bool = True, donate: bool = True
+                       ) -> tuple[ScheduleExecutable, str, bool]:
+        """-> ``(executable, key, hit)``."""
+        key = schedule_key(schedule, seed=seed, interpret=interpret,
+                           fingerprint=self.fingerprint)
+        exe = self._mem.get(key)
+        if exe is not None:
+            self._mem.move_to_end(key)
+            self.hits += 1
+            return exe, key, True
+        self.misses += 1
+        exe = compile_schedule(schedule, inputs, seed=seed,
+                               interpret=interpret, donate=donate, key=key)
+        self._mem[key] = exe
+        self.puts += 1
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+            self.evictions += 1
+        return exe, key, False
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"entries": len(self._mem), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0,
+                "evictions": self.evictions, "puts": self.puts,
+                "fingerprint": self.fingerprint}

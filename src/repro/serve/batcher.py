@@ -16,12 +16,23 @@ Simulated accounting (exact, host integers):
 * ``machine_cycles``  = sum member compute + amortized transposes
   (the throughput/occupancy charge).
 
-``execute`` additionally runs the same reduction *on device* -- one jitted
-call per group, the member axis sharded over ``repro.dist`` data axes
-(``shard(cycles, "batch", None)``; a no-op off-mesh) -- and that call's
-wall-clock is serve-bench's per-request execute latency.  Device math is
-float32 (cycle counts can exceed int32), so artifact cycle totals always
-come from the exact host integers.
+``execute`` runs each group through the *measured Pallas path*: the
+group's representative plan (the member whose schedule measures the most
+padded MACs under ``execute_budget``; ties break toward the widest plan,
+the group's latency bound) lowers to a
+:class:`repro.plan.pallas.PallasSchedule` and compiles to ONE jitted
+device program
+(``plan.pallas_exec.compile_schedule``; weights device-resident, step
+outputs threaded, repacks in-program).  The warm wall-clock of that
+program is serve-bench's per-request execute latency; compile cost is
+charged separately (``execute_compile_us``, zero on an executable-cache
+hit) so the p99 gate sees the steady state.  Until PR 10 this was an
+analytic float32 cycle reduction -- a proxy, not the kernels.
+
+Ops the budget refuses (interpret mode is ~10^8 MAC/s; serving shapes
+can exceed any honest window) stay modelled-only rows per the DESIGN.md
+Sec. 14 contract -- the row reports ``measured_steps``/``modelled_steps``
+so the artifact says exactly how much of each plan was run vs modelled.
 """
 from __future__ import annotations
 
@@ -29,9 +40,13 @@ import dataclasses
 import time
 from typing import Optional, Sequence
 
-import numpy as np
-
 from repro.serve.service import CompiledRequest
+
+#: default padded-MAC budget per serve-side kernel launch: admits the
+#: short-context attention/classifier matmuls (a warm chained program is
+#: tens of ms in interpret mode) while refusing the multi-second
+#: long-context GEMMs -- honest refusal, never silent clamping
+DEFAULT_EXECUTE_BUDGET = 2 ** 28
 
 
 @dataclasses.dataclass
@@ -41,8 +56,10 @@ class BatchGroup:
     signature: tuple[str, ...]
     members: list[CompiledRequest]
 
-    #: wall-clock of the device step (filled by ``execute``)
+    #: warm wall-clock of the compiled schedule (filled by ``execute``)
     execute_us: Optional[float] = None
+    #: executable compile cost (0.0 on an executable-cache hit)
+    execute_compile_us: Optional[float] = None
 
     @property
     def size(self) -> int:
@@ -78,14 +95,31 @@ class BatchGroup:
 
 
 class PhaseBatcher:
-    """Group compiled requests by layout-phase signature and execute each
-    group as one batched, mesh-sharded decode step."""
+    """Group compiled requests by layout-phase signature and execute
+    each group as one compiled Pallas schedule (module doc).
 
-    def __init__(self, max_batch: int = 64, mesh=None):
+    ``executables`` is the content-addressed executable cache shared
+    across groups (constructed on demand); ``execute_budget`` is the
+    per-launch padded-MAC budget passed to ``lower_plan_pallas``."""
+
+    def __init__(self, max_batch: int = 64,
+                 execute_budget: int = DEFAULT_EXECUTE_BUDGET,
+                 executables=None, interpret: bool = True, seed: int = 0):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1 (got {max_batch})")
         self.max_batch = max_batch
-        self.mesh = mesh
+        self.execute_budget = execute_budget
+        self.interpret = interpret
+        self.seed = seed
+        self._executables = executables
+
+    @property
+    def executables(self):
+        if self._executables is None:
+            from repro.plan.pallas_exec import ExecutableCache
+
+            self._executables = ExecutableCache()
+        return self._executables
 
     # ------------------------------------------------------------- group
     def group(self, compiled: Sequence[CompiledRequest]
@@ -105,43 +139,55 @@ class PhaseBatcher:
 
     # ----------------------------------------------------------- execute
     def execute(self, group: BatchGroup, warmup: bool = True) -> dict:
-        """Run the group's batched decode-step reduction on device and
-        record its wall-clock on the group (``execute_us``)."""
-        import jax
+        """Run the group's representative plan as one compiled Pallas
+        schedule; record warm wall-clock + compile cost on the group.
 
-        from repro.dist.sharding import use_mesh
+        The representative is the member whose lowered schedule measures
+        the MOST padded MACs under ``execute_budget`` -- the heaviest
+        program the budget can honestly time (DESIGN.md Sec. 14 refuses
+        over-budget steps, so the widest member of a mixed-token group
+        usually lowers to all-modelled rows; picking it would "measure"
+        an empty program).  Ties break toward the largest planned cycle
+        total, the group's latency bound.  Exact cycle totals in the
+        returned row still come from the host integers (the simulated
+        accounting is layout math, not wall-clock).
+        """
+        from repro.core.cost_model import Layout
+        from repro.plan.pallas import lower_plan_pallas
 
-        step_cycles = np.zeros((group.size, len(group.signature)),
-                               np.float32)
-        for b, m in enumerate(group.members):
-            for s_i, s in enumerate(m.plan.steps):
-                step_cycles[b, s_i] = float(s.cycles)
-        transposes = np.asarray(group.member_transpose_cycles(), np.float32)
-        # pad the member axis to a power of two: bounds the number of
-        # retraces AND gives the mesh's data axes an even divisor
-        b_pad = 1
-        while b_pad < group.size:
-            b_pad *= 2
-        pad = b_pad - group.size
-        if pad:
-            step_cycles = np.pad(step_cycles, ((0, pad), (0, 0)))
-            transposes = np.pad(transposes, (0, pad))
-        mask = np.arange(b_pad) < group.size
+        def measurable_macs(sched) -> int:
+            total = 0
+            for s in sched.measured_steps:
+                m_p, k_p, n_p = s.padded_dims
+                planes = s.width if s.layout is Layout.BS else 1
+                total += m_p * k_p * n_p * planes
+            return total
 
-        with use_mesh(self.mesh):
-            if warmup:  # compile outside the timed window
-                jax.block_until_ready(
-                    _batched_step(step_cycles, transposes, mask))
-            t0 = time.perf_counter()
-            latency, machine = jax.block_until_ready(
-                _batched_step(step_cycles, transposes, mask))
-            group.execute_us = (time.perf_counter() - t0) * 1e6
+        rep, sched, best = None, None, (-1, -1)
+        for m in group.members:
+            cand_sched = lower_plan_pallas(m.plan, m.workload,
+                                           max_macs=self.execute_budget)
+            cand = (measurable_macs(cand_sched), m.plan.total_cycles)
+            if cand > best:
+                rep, sched, best = m, cand_sched, cand
+        exe, key, hit = self.executables.get_or_compile(
+            sched, seed=self.seed, interpret=self.interpret)
+        if warmup:  # steady-state: warm outside the timed window
+            exe.run()
+        t0 = time.perf_counter()
+        exe.run()
+        group.execute_us = (time.perf_counter() - t0) * 1e6
+        group.execute_compile_us = 0.0 if hit else exe.compile_us
 
         return {
             "size": group.size,
             "execute_us": group.execute_us,
-            "device_latency_cycles": float(latency),
-            "device_machine_cycles": float(machine),
+            "execute_compile_us": group.execute_compile_us,
+            "executable_key": key,
+            "executable_hit": hit,
+            "representative": rep.request.arch,
+            "measured_steps": exe.n_measured,
+            "modelled_steps": exe.n_modelled,
             "latency_cycles": group.latency_cycles,
             "machine_cycles": group.machine_cycles,
             "transpose_cycles_saved": group.transpose_cycles_saved,
@@ -151,37 +197,3 @@ class PhaseBatcher:
             ) -> tuple[list[BatchGroup], list[dict]]:
         groups = self.group(compiled)
         return groups, [self.execute(g) for g in groups]
-
-
-def _make_batched_step():
-    import jax
-    import jax.numpy as jnp
-
-    from repro.dist.sharding import shard
-
-    @jax.jit
-    def step(step_cycles, transposes, mask):
-        step_cycles = shard(step_cycles, "batch", None)
-        transposes = shard(transposes, "batch")
-        per_member = jnp.where(mask, step_cycles.sum(axis=1), 0.0)
-        tr = jnp.where(mask, transposes, 0.0)
-        amortized = tr.max()               # one shared pass per boundary
-        latency = per_member.max() + amortized
-        machine = per_member.sum() + amortized
-        return latency, machine
-
-    return step
-
-
-class _LazyStep:
-    """Defer jax import (and jit construction) to first execution."""
-
-    _fn = None
-
-    def __call__(self, *args):
-        if _LazyStep._fn is None:
-            _LazyStep._fn = _make_batched_step()
-        return _LazyStep._fn(*args)
-
-
-_batched_step = _LazyStep()

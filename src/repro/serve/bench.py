@@ -3,11 +3,15 @@
 One run = sample ``n`` concurrent requests from a :class:`TrafficMix`,
 compile each through :class:`PlanService` (content-addressed plan cache),
 group the compiled decode steps with :class:`PhaseBatcher`, and execute
-every group as one mesh-sharded batched step.  The result dict -- p50/p99
-plan-compile and execute latencies, cache hit/miss/eviction counters,
-batching and simulated-cycle totals -- is committed to
-``bench-artifacts/serve.json`` under the versioned artifact envelope and
-gated in CI (p99 execute latency, >25% regression budget).
+every group as ONE compiled Pallas schedule
+(``plan.pallas_exec.compile_schedule``) -- so the artifact's execute
+latencies are measured kernel wall-clock, not the pre-PR-10 analytic
+float32 reduction.  The result dict -- p50/p99 plan-compile latency,
+*warm* execute latency and executable-compile cost (split so the p99
+gate sees the steady state), cache counters for both the plan cache and
+the executable cache, batching and simulated-cycle totals -- is
+committed to ``bench-artifacts/serve.json`` under the versioned artifact
+envelope and gated in CI (p99 warm execute, regression budget + floor).
 
 ``python -m repro serve-bench [--quick]`` is the CLI entry.
 """
@@ -19,7 +23,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.params import SystemParams, PAPER_SYSTEM
-from repro.serve.batcher import PhaseBatcher
+from repro.serve.batcher import DEFAULT_EXECUTE_BUDGET, PhaseBatcher
 from repro.serve.plan_cache import PlanCache
 from repro.serve.service import PlanService
 from repro.serve.traffic import TrafficMix
@@ -34,33 +38,24 @@ def _percentiles(us: Sequence[float]) -> dict:
             "mean": float(arr.mean()), "max": float(arr.max())}
 
 
-def default_mesh():
-    """A 1-D ``("data",)`` mesh over every local device, or None on a
-    single device (``shard`` degrades to a no-op either way)."""
-    import jax
-
-    devs = jax.devices()
-    if len(devs) < 2:
-        return None
-    from jax.sharding import Mesh
-
-    return Mesh(np.array(devs), ("data",))
-
-
 def run_serve_bench(n_requests: int = 2048, *, seed: int = 0,
                     mix: Optional[TrafficMix] = None,
                     sys: SystemParams = PAPER_SYSTEM,
                     cache: Optional[PlanCache] = None,
                     cache_dir: Optional[str] = None, persist: bool = True,
-                    max_batch: int = 64, mesh=None,
-                    use_mesh_if_available: bool = True) -> dict:
-    """Replay the traffic mix; returns the serve.json payload dict."""
+                    max_batch: int = 64,
+                    execute_budget: int = DEFAULT_EXECUTE_BUDGET) -> dict:
+    """Replay the traffic mix; returns the serve.json payload dict.
+
+    ``execute_budget`` is the per-launch padded-MAC budget for the Pallas
+    execute path (``PhaseBatcher.execute``); plans whose steps exceed it
+    run as modelled-only rows, counted in ``executables`` below.
+    """
     mix = mix or TrafficMix.default()
     service = PlanService(sys, cache=cache, cache_dir=cache_dir,
                           persist=persist)
-    if mesh is None and use_mesh_if_available:
-        mesh = default_mesh()
-    batcher = PhaseBatcher(max_batch=max_batch, mesh=mesh)
+    batcher = PhaseBatcher(max_batch=max_batch,
+                           execute_budget=execute_budget, seed=seed)
 
     t0 = time.perf_counter()
     requests = mix.sample(n_requests, seed=seed)
@@ -69,8 +64,11 @@ def run_serve_bench(n_requests: int = 2048, *, seed: int = 0,
     groups, rows = batcher.run(compiled)
     elapsed = time.perf_counter() - t0
 
-    # per-request execute latency = its group's batched-step wall-clock
+    # per-request latency = its group's compiled-schedule wall-clock
+    # (warm) / executable-compile cost (0 on an executable-cache hit)
     execute_us = [g.execute_us for g in groups for _ in g.members]
+    execute_compile_us = [g.execute_compile_us for g in groups
+                          for _ in g.members]
     compile_us = [c.compile_us for c in compiled]
     sizes = [g.size for g in groups]
     stats = service.cache.stats()
@@ -81,13 +79,19 @@ def run_serve_bench(n_requests: int = 2048, *, seed: int = 0,
         "mix": mix.to_dict(),
         "distinct_plans_bound": mix.distinct_plans,
         "geometry": _geometry_dict(service.sys),
-        "mesh_devices": int(np.prod(mesh.devices.shape)) if mesh else 1,
         "plan_compile_us": _percentiles(compile_us),
         "execute_us": _percentiles(execute_us),
+        "execute_compile_us": _percentiles(execute_compile_us),
         "compile_phase_s": compile_done - t0,
         "elapsed_s": elapsed,
         "throughput_rps": n_requests / elapsed if elapsed else 0.0,
         "cache": stats,
+        "executables": {
+            **batcher.executables.stats(),
+            "execute_budget": execute_budget,
+            "measured_steps": sum(r["measured_steps"] for r in rows),
+            "modelled_steps": sum(r["modelled_steps"] for r in rows),
+        },
         "batches": {
             "count": len(groups),
             "signatures": len({g.signature for g in groups}),

@@ -34,7 +34,6 @@ from __future__ import annotations
 
 import collections
 import hashlib
-import inspect
 import json
 import os
 import time
@@ -55,12 +54,14 @@ def default_cache_dir() -> str:
 def scheduler_fingerprint() -> str:
     """Source fingerprint of everything that determines a compiled plan:
     the scheduler (solvers + assembly) and the cost model its node
-    weights come from.  Any edit invalidates every cached plan."""
+    weights come from.  Any edit invalidates every cached plan.  Shares
+    ``util.source_fingerprint`` with the executable cache
+    (``plan.pallas_exec.kernel_fingerprint``)."""
     from repro.core import cost_model
     from repro.plan import scheduler
+    from repro.util import source_fingerprint
 
-    src = inspect.getsource(scheduler) + inspect.getsource(cost_model)
-    return hashlib.sha256(src.encode()).hexdigest()[:16]
+    return source_fingerprint(scheduler, cost_model)
 
 
 def plan_key(workload: Workload, sys: SystemParams,

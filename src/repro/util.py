@@ -6,16 +6,55 @@ counting pass therefore lowers reduced-depth configs with
 ``REPRO_UNROLL_SCANS=1`` -- every `util.scan` becomes a Python loop, the HLO
 contains no while ops, and cost analysis is exact -- then extrapolates
 linearly in depth (layers are homogeneous). See launch/dryrun.py.
+
+Also home to the content-address provenance primitives shared by the
+caching layers (sweep grid, plan cache, executable cache) -- this module
+sits below every subsystem, so none of them has to import another just
+to fingerprint sources.
 """
 from __future__ import annotations
 
+import hashlib
+import inspect
 import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 _REMAT = False
+
+
+def source_fingerprint(*modules, digest_len: int = 16) -> str:
+    """sha256 over the concatenated source of ``modules``.
+
+    The provenance half of every content address in the repo (sweep
+    cache, plan cache, executable cache): editing any fingerprinted
+    module changes the address, so stale cached artifacts can never be
+    served after a code change.
+    """
+    h = hashlib.sha256()
+    for mod in modules:
+        h.update(inspect.getsource(mod).encode())
+    return h.hexdigest()[:digest_len]
+
+
+def rand_words(rng: np.random.Generator, width: int, shape) -> np.ndarray:
+    """Unsigned ``width``-bit weight words in the canonical int32 storage
+    (the word form every kernel path consumes).
+
+    ``width >= 32`` draws the full uint32 range and reinterprets the bits
+    as int32: the old ``1 << min(width, 31)`` bound could never generate
+    the top bit, so width-32 paths were only ever exercised at 31-bit
+    range.  The signed view is lossless -- every kernel path agrees
+    mod 2^32 (DESIGN.md Sec. 14), so a negative int32 is just the same
+    32-bit word.
+    """
+    if width >= 32:
+        raw = rng.integers(0, 1 << 32, shape, dtype=np.uint64)
+        return raw.astype(np.uint32).view(np.int32)
+    return rng.integers(0, 1 << width, shape).astype(np.int32)
 
 
 def set_remat(value: bool) -> None:

@@ -89,7 +89,9 @@ def test_hybrid_schedule_matches_executor_bit_exact(hybrid_plan):
             rng.integers(0, 1 << min(s.width, 2), (k, n)).astype(np.int32),
         )
 
-    pallas_out = run_schedule(sched, inputs)
+    # thread=False: the executor replays each op on ITS synthetic
+    # operands; threading would overwrite mm_hi's x with mm_lo's output
+    pallas_out = run_schedule(sched, inputs, thread=False)
 
     def run_prog(prog, inp, n):
         cells = ex.init_cells(prog, n)
